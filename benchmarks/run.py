@@ -1,0 +1,48 @@
+"""Benchmark orchestrator: one entry per paper table/figure + beyond-paper.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig8_retention]
+
+Prints `name,wall_s,checks_passed,detail` CSV lines and writes full JSON
+to results/benchmarks/<name>.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main() -> int:
+    from benchmarks.figures import ALL
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only")
+    ap.add_argument("--out", default="results/benchmarks")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    names = [args.only] if args.only else list(ALL)
+    print("name,wall_s,checks_passed,detail")
+    n_fail = 0
+    for name in names:
+        t0 = time.time()
+        try:
+            res = ALL[name]()
+            checks = res.get("checks", {})
+            ok = all(checks.values())
+            bad = [k for k, v in checks.items() if not v]
+            if not ok:
+                n_fail += 1
+            with open(os.path.join(args.out, f"{name}.json"), "w") as f:
+                json.dump(res, f, indent=1, default=str)
+            print(f"{name},{time.time()-t0:.2f},"
+                  f"{sum(checks.values())}/{len(checks)},"
+                  f"{'OK' if ok else 'FAILED:' + ';'.join(bad)}")
+        except Exception as e:  # pragma: no cover
+            n_fail += 1
+            print(f"{name},{time.time()-t0:.2f},0/0,ERROR:{e}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

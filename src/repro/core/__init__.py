@@ -1,0 +1,6 @@
+"""OpenGCRAM core — the paper's contribution as a composable JAX library.
+
+Entry point: repro.core.compiler.GCRAMCompiler (config -> netlists,
+floorplan, timing/power/retention reports); design-space exploration in
+repro.core.dse; multibank macros in repro.core.multibank.
+"""

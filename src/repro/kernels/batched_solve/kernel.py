@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: batched dense Gauss-Jordan solve of MNA Newton
+systems J x = r over a (B, N, N) batch.
+
+Why this exists (DESIGN.md §6): the SPICE inner loop of the paper's
+compiler is one small dense solve per Newton iteration per design point.
+HSPICE runs them serially on CPU; on TPU the batch dimension maps onto
+VPU lanes — hundreds of design-space corners solve in one fused kernel
+with every operand resident in VMEM.
+
+Algorithm: Gauss-Jordan WITHOUT pivoting — valid because the MNA Jacobian
+carries gmin + C/h + G_BIG diagonal stamps (strictly dominant diagonal;
+asserted in tests against jnp.linalg.solve). Jordan elimination (zeroing
+the whole column each step) trades ~1.5x flops vs LU for a branch-free,
+mask-only inner body — the right trade on the VPU where the (B, N) row
+update is a single fused multiply-add wavefront.
+
+Tiling: grid over batch tiles of bB systems; each block holds
+(bB, Np, Np) + (bB, Np) in VMEM with Np padded to the 128-lane boundary
+(identity rows in the pad region keep the math exact). VMEM footprint
+bB*Np*(Np+1)*4 B — e.g. 8 x 128 x 129 x 4 = 528 KiB < 1 MiB budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gauss_jordan_kernel(j_ref, r_ref, x_ref):
+    J = j_ref[...].astype(jnp.float32)       # (bB, Np, Np)
+    r = r_ref[...].astype(jnp.float32)       # (bB, Np)
+    bB, Np, _ = J.shape
+    rows = jax.lax.broadcasted_iota(jnp.int32, (Np,), 0)
+
+    def body(k, carry):
+        J, r = carry
+        piv_row = jax.lax.dynamic_slice_in_dim(J, k, 1, axis=1)   # (bB,1,Np)
+        piv_r = jax.lax.dynamic_slice_in_dim(r, k, 1, axis=1)     # (bB,1)
+        piv = jax.lax.dynamic_slice_in_dim(piv_row, k, 1, axis=2) # (bB,1,1)
+        inv = 1.0 / piv[:, :, 0]                                  # (bB,1)
+        col = jax.lax.dynamic_slice_in_dim(J, k, 1, axis=2)[..., 0]  # (bB,Np)
+        factor = col * inv                                        # (bB,Np)
+        mask = (rows != k).astype(jnp.float32)                    # (Np,)
+        factor = factor * mask[None, :]
+        # rank-1 update: rows i != k across the whole column block
+        J = J - factor[:, :, None] * piv_row
+        r = r - factor * piv_r
+        return J, r
+
+    J, r = jax.lax.fori_loop(0, Np, body, (J, r))
+    diag = jnp.diagonal(J, axis1=1, axis2=2)                      # (bB,Np)
+    x_ref[...] = (r / diag).astype(x_ref.dtype)
+
+
+def _pad_to(x, n, axis, diag_pad=False):
+    pad = n - x.shape[axis]
+    if pad <= 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def batched_solve(J, r, *, block_b: int = 8, interpret: bool = False):
+    """J: (B, N, N), r: (B, N) -> x: (B, N). fp32 compute.
+
+    N is padded to a multiple of 128 (TPU lanes) with identity rows;
+    B is padded to a multiple of block_b.
+    """
+    B, N = r.shape
+    Np = max(128, -(-N // 128) * 128)
+    Bp = -(-B // block_b) * block_b
+
+    Jp = _pad_to(_pad_to(J, Np, 1), Np, 2)
+    if Np > N:  # identity in the pad block keeps the system solvable
+        eye = jnp.zeros((Np, Np), J.dtype).at[
+            jnp.arange(N, Np), jnp.arange(N, Np)].set(1.0)
+        Jp = Jp + eye[None]
+    rp = _pad_to(r, Np, 1)
+    Jp = _pad_to(Jp, Bp, 0)
+    rp = _pad_to(rp, Bp, 0)
+    if Bp > B:  # pad systems must stay non-singular
+        eyeb = jnp.broadcast_to(jnp.eye(Np, dtype=J.dtype), (Bp - B, Np, Np))
+        Jp = Jp.at[B:].set(eyeb)
+
+    out = pl.pallas_call(
+        _gauss_jordan_kernel,
+        grid=(Bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, Np, Np), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, Np), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, Np), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Np), jnp.float32),
+        interpret=interpret,
+    )(Jp, rp)
+    return out[:B, :N].astype(r.dtype)

@@ -1,0 +1,28 @@
+"""Jit'd public wrappers for the batched MNA solve.
+
+On CPU (this container / unit tests) the Pallas kernel runs in
+interpret mode; on TPU it compiles natively. `solve1` adapts the kernel
+to the single-system signature the Newton stepper uses — under vmap
+(design-space batches) the batch dimension folds back into the kernel's
+grid via jax's batching rule for pallas_call.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.batched_solve.kernel import batched_solve as _kernel
+from repro.kernels.batched_solve.ref import batched_solve_ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def batched_solve(J, r, block_b: int = 8):
+    return _kernel(J, r, block_b=block_b, interpret=_interpret())
+
+
+def solve1(J, r):
+    """Single system (N, N) @ x = (N,)."""
+    return batched_solve(J[None], r[None], block_b=1)[0]

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the batched MNA solve."""
+import jax.numpy as jnp
+
+
+def batched_solve_ref(J, r):
+    """J: (B, N, N), r: (B, N) -> x with J @ x = r."""
+    return jnp.linalg.solve(J, r[..., None])[..., 0]

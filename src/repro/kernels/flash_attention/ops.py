@@ -1,0 +1,33 @@
+"""Public wrapper: pads to block multiples, interpret on CPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, q_offset=0, *, bq=256, bkv=512, causal=True):
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    bq_ = min(bq, Sq)
+    bkv_ = min(bkv, Skv)
+    Sqp = -(-Sq // bq_) * bq_
+    Skvp = -(-Skv // bkv_) * bkv_
+    if Sqp != Sq:
+        q = jnp.pad(q, ((0, 0), (0, Sqp - Sq), (0, 0), (0, 0)))
+    if Skvp != Skv:
+        # padded keys masked out via causal positions only when causal;
+        # for non-causal, mask by writing NEG-biased keys is avoided by
+        # requiring divisible Skv in the non-causal path.
+        assert causal, "non-causal path requires Skv % bkv == 0"
+        k = jnp.pad(k, ((0, 0), (0, Skvp - Skv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Skvp - Skv), (0, 0), (0, 0)))
+    out = flash_attention_fwd(q, k, v, q_offset, bq=bq_, bkv=bkv_,
+                              causal=causal, interpret=_interpret())
+    return out[:, :Sq]

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: one implicit step of an R x C gain-cell bitcell
+array with bitline-rail coupling (structured "fast-SPICE").
+
+Why this exists (DESIGN.md §6): a 16 Kb array is ~10^4 nonlinear storage
+nodes. A flat MNA solve is O((RC)^3); but the circuit GRAPH is special —
+cells couple only through the bitline rails. Exploiting that structure:
+per-cell pointwise-implicit Newton (VPU elementwise over the (R, bC)
+tile) + per-column rail KCL via column-sum reductions, Gauss-Seidel
+between the two. This is the TPU re-expression of hierarchical fast-SPICE
+partitioning (the paper's HSPICE bottleneck for full-array disturb /
+retention sweeps).
+
+Tiling: grid over column blocks (columns are independent given their own
+rail); each tile holds (R, bC) SN states + (bC,) rail states in VMEM.
+R x bC x 4 B with R <= 512, bC = 128 -> 256 KiB: fits with headroom.
+The device model (EKV) is inlined elementwise jnp — VPU-friendly
+(softplus/exp), no MXU needed except the column reductions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.spice.mna import channel_current_raw
+
+NEWTON = 3
+GS_SWEEPS = 2
+
+_PKEYS = ("vtw", "nw", "kpw", "lamw", "ww", "lw",
+          "vtr", "nr", "kpr", "lamr", "wr", "lr",
+          "c_sn", "c_bl", "g_bl", "v_bl_drv")
+
+
+def _step_math(v_sn, v_bl, wwl, wbl, rwl, h, p):
+    """Shared tile math (identical to ref.py on a full tile)."""
+    def i_write(vs):
+        return channel_current_raw(1.0, p["vtw"], p["nw"], p["kpw"],
+                                   p["lamw"], p["ww"], p["lw"],
+                                   wwl[:, None], vs, wbl[None, :])
+
+    def i_read(vs, vb):
+        return channel_current_raw(1.0, p["vtr"], p["nr"], p["kpr"],
+                                   p["lamr"], p["wr"], p["lr"],
+                                   vs, vb[None, :], rwl[:, None])
+
+    v_sn_new, v_bl_new = v_sn, v_bl
+    dv = 1e-4
+    for _ in range(GS_SWEEPS):
+        def res(vs):
+            return p["c_sn"] * (vs - v_sn) / h + i_write(vs)
+
+        vs = v_sn_new
+        for _ in range(NEWTON):
+            r = res(vs)
+            dr = (res(vs + dv) - r) / dv
+            vs = vs - r / jnp.maximum(dr, 1e-18)
+        v_sn_new = vs
+
+        i_col = jnp.sum(i_read(v_sn_new, v_bl_new), axis=0)
+        g_cells = (jnp.sum(i_read(v_sn_new, v_bl_new + dv), axis=0)
+                   - i_col) / dv
+        num = (p["c_bl"] / h) * v_bl + p["g_bl"] * p["v_bl_drv"] \
+            - (i_col - g_cells * v_bl_new)
+        den = p["c_bl"] / h + p["g_bl"] + g_cells
+        v_bl_new = num / den
+    return v_sn_new, v_bl_new
+
+
+def _kernel(p_ref, vsn_ref, vbl_ref, wwl_ref, wbl_ref, rwl_ref, h_ref,
+            out_sn_ref, out_bl_ref):
+    p = {k: p_ref[i] for i, k in enumerate(_PKEYS)}
+    v_sn = vsn_ref[...]
+    v_bl = vbl_ref[...]
+    sn, bl = _step_math(v_sn, v_bl, wwl_ref[...], wbl_ref[...], rwl_ref[...],
+                        h_ref[0], p)
+    out_sn_ref[...] = sn
+    out_bl_ref[...] = bl
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_c", "interpret"))
+def gc_array_step(v_sn, v_bl, wwl, wbl, rwl, h, p, *, block_c: int = 128,
+                  interpret: bool = False):
+    """See ref.gc_array_step_ref. Tiles over column blocks."""
+    R, C = v_sn.shape
+    bC = min(block_c, C)
+    Cp = -(-C // bC) * bC
+    pad_c = [(0, 0), (0, Cp - C)]
+    v_sn_p = jnp.pad(v_sn, pad_c)
+    v_bl_p = jnp.pad(v_bl, ((0, Cp - C),))
+    wbl_p = jnp.pad(wbl, ((0, Cp - C),))
+    pvec = jnp.stack([jnp.asarray(p[k], jnp.float32) for k in _PKEYS])
+    harr = jnp.asarray([h], jnp.float32)
+
+    out_sn, out_bl = pl.pallas_call(
+        _kernel,
+        grid=(Cp // bC,),
+        in_specs=[
+            pl.BlockSpec((len(_PKEYS),), lambda i: (0,)),
+            pl.BlockSpec((R, bC), lambda i: (0, i)),
+            pl.BlockSpec((bC,), lambda i: (i,)),
+            pl.BlockSpec((R,), lambda i: (0,)),
+            pl.BlockSpec((bC,), lambda i: (i,)),
+            pl.BlockSpec((R,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((R, bC), lambda i: (0, i)),
+            pl.BlockSpec((bC,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, Cp), jnp.float32),
+            jax.ShapeDtypeStruct((Cp,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pvec, v_sn_p, v_bl_p, wwl, wbl_p, rwl, harr)
+    return out_sn[:, :C], out_bl[:C]

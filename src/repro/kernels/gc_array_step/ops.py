@@ -1,0 +1,33 @@
+"""Public wrappers for the array-step kernel + convenience param packing."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.cells import CELLS, Bitcell
+from repro.core.techfile import TechFile, SYN40
+from repro.kernels.gc_array_step.kernel import gc_array_step as _kernel
+from repro.kernels.gc_array_step.ref import gc_array_step_ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def cell_params(cell_name: str = "gc2t_nn", tech: TechFile = SYN40,
+                c_bl: float = 20e-15, g_bl: float = 1e-4,
+                v_bl_drv: float = 0.0) -> dict:
+    cell: Bitcell = CELLS[cell_name]
+    wf, rf = cell.wf(tech), cell.rf(tech)
+    return {
+        "vtw": wf.vt0, "nw": wf.n_slope, "kpw": wf.k_prime,
+        "lamw": wf.lambda_, "ww": cell.w_write, "lw": cell.l_write,
+        "vtr": rf.vt0, "nr": rf.n_slope, "kpr": rf.k_prime,
+        "lamr": rf.lambda_, "wr": cell.w_read, "lr": cell.l_read,
+        "c_sn": cell.sn_cap(tech), "c_bl": c_bl, "g_bl": g_bl,
+        "v_bl_drv": v_bl_drv,
+    }
+
+
+def gc_array_step(v_sn, v_bl, wwl, wbl, rwl, h, p, block_c: int = 128):
+    return _kernel(v_sn, v_bl, wwl, wbl, rwl, h, p,
+                   block_c=block_c, interpret=_interpret())

@@ -1,0 +1,67 @@
+"""Pure-jnp oracle for the structured bitcell-array implicit step."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spice.mna import channel_current_raw
+
+NEWTON = 3
+GS_SWEEPS = 2
+
+
+def gc_array_step_ref(v_sn, v_bl, wwl, wbl, rwl, h, p):
+    """One backward-Euler step of an R x C gain-cell array.
+
+    v_sn: (R, C) storage nodes;  v_bl: (C,) read bitlines
+    wwl:  (R,) write wordline voltages;  wbl: (C,) write bitlines
+    rwl:  (R,) read wordline voltages (source terminal of read devices)
+    h: timestep; p: dict of scalars {vtw, nw, kpw, lamw, ww, lw,
+       vtr, nr, kpr, lamr, wr, lr, c_sn, c_bl, g_bl} (g_bl: BL driver
+       conductance to its target v_bl_drv).
+
+    Returns (v_sn', v_bl'). Cells couple ONLY through the bitline rails:
+    per-cell pointwise-implicit Newton for SN, column-sum KCL for rails,
+    Gauss-Seidel between the two (the fast-SPICE partitioning).
+    """
+    R, C = v_sn.shape
+
+    def i_write(vsn, row_wwl, col_wbl):
+        # write device: gate=WWL, channel WBL <-> SN
+        return channel_current_raw(1.0, p["vtw"], p["nw"], p["kpw"],
+                                   p["lamw"], p["ww"], p["lw"],
+                                   row_wwl, vsn, col_wbl)
+
+    def i_read(vsn, vbl, row_rwl):
+        # read device: gate=SN, channel RBL <-> RWL
+        return channel_current_raw(1.0, p["vtr"], p["nr"], p["kpr"],
+                                   p["lamr"], p["wr"], p["lr"],
+                                   vsn, vbl, row_rwl)
+
+    v_sn_new, v_bl_new = v_sn, v_bl
+    for _ in range(GS_SWEEPS):
+        # --- per-cell implicit SN update (rails frozen) ---
+        def res_sn(vs):
+            return (p["c_sn"] * (vs - v_sn) / h
+                    + i_write(vs, wwl[:, None], wbl[None, :]))
+
+        vs = v_sn_new
+        dv = 1e-4
+        for _ in range(NEWTON):
+            r = res_sn(vs)
+            dr = (res_sn(vs + dv) - r) / dv
+            vs = vs - r / jnp.maximum(dr, 1e-18)
+        v_sn_new = vs
+
+        # --- rail update: linearized KCL with column-summed currents ---
+        i_cells = i_read(v_sn_new, v_bl_new[None, :], rwl[:, None])
+        i_col = jnp.sum(i_cells, axis=0)              # (C,) leaving BL
+        # conductance of cells wrt BL (numerical, for implicit rail)
+        dv = 1e-3
+        g_cells = (jnp.sum(i_read(v_sn_new, (v_bl_new + dv)[None, :],
+                                  rwl[:, None]), axis=0) - i_col) / dv
+        num = (p["c_bl"] / h) * v_bl + p["g_bl"] * p["v_bl_drv"] \
+            - (i_col - g_cells * v_bl_new)
+        den = p["c_bl"] / h + p["g_bl"] + g_cells
+        v_bl_new = num / den
+    return v_sn_new, v_bl_new

@@ -1,0 +1,157 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST run before any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x live input shape) cell, on the single-pod
+(16,16) mesh and the multi-pod (2,16,16) mesh:
+
+    lowered  = jit(step).lower(*sharded ShapeDtypeStructs)
+    compiled = lowered.compile()
+    memory_analysis / cost_analysis / hlo_analysis -> JSON record
+
+No arrays are ever allocated: inputs are ShapeDtypeStructs; the products
+are the compiled per-device program and its analyses.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+    python -m repro.launch.dryrun --all --out results/dryrun
+    python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k --multi-pod
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             block_skip=False, microbatches=1, moment_dtype="float32",
+             baseline=False, kv_dtype=None, extra_tags=None) -> dict:
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config, SHAPES
+    from repro.launch.mesh import make_production_mesh, n_chips
+    from repro.launch import steps as steps_mod
+    from repro.launch import hlo_analysis, roofline
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rules_kind = None
+    if baseline:
+        # paper-faithful baseline: plain GSPMD layouts, no beyond-paper
+        # optimizations (seq-parallel attention, 2D serving MoE, serve rules)
+        cfg = dataclasses.replace(cfg, attn_seqpar=False)
+        os.environ["REPRO_MOE_SMALL_T"] = "0"
+        rules_kind = "train"
+    else:
+        os.environ.pop("REPRO_MOE_SMALL_T", None)
+    if kv_dtype:
+        cfg = dataclasses.replace(cfg, kv_dtype=kv_dtype)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "x".join(str(s) for s in mesh.devices.shape),
+           "multi_pod": multi_pod, "kind": shape.kind,
+           "baseline": baseline,
+           "block_skip": block_skip, "microbatches": microbatches}
+    if extra_tags:
+        rec.update(extra_tags)
+    t0 = time.time()
+    bundle = steps_mod.build(cfg, mesh, shape, block_skip=block_skip,
+                             microbatches=microbatches,
+                             moment_dtype=jnp.dtype(moment_dtype),
+                             rules_kind=rules_kind)
+    with mesh:
+        lowered = bundle.lower()
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    an = hlo_analysis.analyze(txt, n_chips(mesh))
+    mf = roofline.model_flops_for(cfg, shape)
+    rl = roofline.derive(an, n_chips=n_chips(mesh), model_flops=mf)
+
+    rec.update({
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "memory_analysis": {
+            "argument_bytes_per_device": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes_per_device": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes_per_device": getattr(ma, "temp_size_in_bytes", None),
+            "alias_bytes_per_device": getattr(ma, "alias_size_in_bytes", None),
+        },
+        "xla_cost_analysis": {k: ca.get(k) for k in ("flops", "bytes accessed")},
+        "hlo_analysis": an,
+        "roofline": rl.as_dict(),
+        "hlo_bytes": len(txt),
+    })
+    # peak per-device bytes: args + temp (aliased buffers counted once)
+    args_b = rec["memory_analysis"]["argument_bytes_per_device"] or 0
+    temp_b = rec["memory_analysis"]["temp_bytes_per_device"] or 0
+    alias_b = rec["memory_analysis"]["alias_bytes_per_device"] or 0
+    rec["peak_bytes_per_device"] = args_b + temp_b - alias_b
+    rec["fits_16g_hbm"] = rec["peak_bytes_per_device"] < 16 * 1024 ** 3
+    return rec
+
+
+def live_cells():
+    from repro.configs import ARCH_IDS, get_config
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in cfg.shapes():
+            yield arch, shape.name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--block-skip", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--moment-dtype", default="float32")
+    ap.add_argument("--baseline", action="store_true",
+                    help="paper-faithful layouts; no beyond-paper opts")
+    args = ap.parse_args()
+
+    cells = list(live_cells()) if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    os.makedirs(args.out, exist_ok=True)
+    ok = fail = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'pod512' if mp else 'pod256'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[skip] {tag} (exists)")
+                ok += 1
+                continue
+            try:
+                rec = run_cell(arch, shape, mp,
+                               block_skip=args.block_skip,
+                               microbatches=args.microbatches,
+                               moment_dtype=args.moment_dtype,
+                               baseline=args.baseline)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                rl = rec["roofline"]
+                print(f"[ok] {tag}: compile={rec['compile_s']}s "
+                      f"bottleneck={rl['bottleneck']} step={rl['step_time_s']:.4f}s "
+                      f"mfu={rl['mfu']:.3f} peak_dev_gb="
+                      f"{rec['peak_bytes_per_device']/2**30:.2f}")
+                ok += 1
+            except Exception as e:
+                fail += 1
+                print(f"[FAIL] {tag}: {e}")
+                traceback.print_exc()
+    print(f"dryrun: {ok} ok, {fail} failed")
+    return 1 if fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,135 @@
+"""Logical-axis -> mesh-axis rule tables and sharding-tree builders.
+
+The scheme (MaxText-style, DESIGN.md §5):
+  * batch            -> all data axes ("pod","data")
+  * embed_fsdp       -> "data"   (ZeRO/FSDP shard of the big tables)
+  * embed            -> "data"   (param d_model dim: FSDP; activations fall
+                                  back to replicated because 'data' is taken
+                                  by 'batch' in any activation spec)
+  * heads/kv_heads   -> "model"  (TP), fallback head_dim -> "model" when the
+                        head count does not divide the axis (GSPMD needs
+                        divisibility; logical_to_pspec replicates otherwise)
+  * mlp/inner/...    -> "model"
+  * experts          -> "model"  (EP; moe.py switches to d_ff TP when E < axis)
+  * vocab            -> "model"
+  * kv_seq           -> "model", or ("data","model") when the decode batch is
+                        too small to occupy the data axes (long_500k B=1)
+  * layers/seq/state -> replicated
+
+Divisibility fallback (models/common.logical_to_pspec) replicates any dim
+whose size does not divide the assigned axes, so one rule table serves all
+10 architectures.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import logical_to_pspec
+from repro.launch.mesh import data_axis_names
+
+
+def _sanitize(rules: dict, mesh) -> dict:
+    """Drop mesh axes the rule table names but this mesh doesn't have
+    (e.g. a data-only bring-up mesh has no 'model' axis)."""
+    have = set(mesh.axis_names)
+
+    def fix(v):
+        if v is None:
+            return None
+        axes = v if isinstance(v, tuple) else (v,)
+        axes = tuple(a for a in axes if a in have)
+        if not axes:
+            return None
+        # preserve tuple-ness: consumers iterate rules["batch"] as a tuple
+        return axes if isinstance(v, tuple) else axes[0]
+
+    return {k: fix(v) for k, v in rules.items()}
+
+
+def make_rules(mesh, *, batch_size: int = None, kind: str = "train") -> dict:
+    data_axes = data_axis_names(mesh)
+    n_data = int(np.prod([mesh.shape[a] for a in data_axes]))
+    small_batch = batch_size is not None and batch_size < n_data
+    if kind == "decode":
+        # Serving layout (§Perf hillclimb #2): no gradients -> no reason to
+        # FSDP-shard weights over 'data' (that put a 58 GB/step expert
+        # all-gather on arctic's decode path). Instead: experts stay EP
+        # over 'model', expert d_ff shards 2D over the data axes (weights
+        # live exactly where they are consumed; MoE psums tiny activations
+        # instead of gathering weights), everything else replicates over
+        # 'data' and keeps TP over 'model'.
+        return _sanitize({
+            "batch": data_axes,
+            "seq": None,
+            "layers": None,
+            # non-expert weights keep the FSDP shard: their per-step
+            # all-gather is ~15 MB/layer (cheap) and replicating them
+            # would blow HBM on archs whose heads don't divide 'model'
+            "embed": "data",
+            "embed_fsdp": "data",
+            "vocab": "model",
+            "heads": "model",
+            "kv_heads": "model",
+            "head_dim": None,
+            "mlp": "model",
+            "expert_mlp": data_axes,
+            "experts": "model",
+            "inner": "model",
+            "inner_all": "model",
+            "conv_dim": "model",
+            "ssm_heads": "model",
+            "kv_seq": ("data", "model") if small_batch else "model",
+        }, mesh)
+    return _sanitize({
+        "batch": data_axes,
+        "seq": None,
+        "layers": None,
+        "embed": "data",
+        "embed_fsdp": "data",
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        # head_dim is NEVER sharded: contracting over a sharded head_dim
+        # puts an all-reduce inside every flash-attention KV chunk (measured:
+        # ~4.5 TB/step wire for qwen2 train_4k). Archs whose head count does
+        # not divide the model axis replicate attention instead (EXPERIMENTS
+        # §Perf hillclimbs attack this with seq-parallel attention).
+        "head_dim": None,
+        "mlp": "model",
+        "expert_mlp": None,
+        "experts": "model",
+        "inner": "model",
+        "inner_all": "model",
+        "conv_dim": "model",
+        "ssm_heads": "model",
+        "kv_seq": ("data", "model") if small_batch else "model",
+    }, mesh)
+
+
+def spec_tree(logical_tree, shape_tree, rules, mesh):
+    """Map a tree of logical-axis tuples + matching ShapeDtypeStructs to
+    PartitionSpecs (with divisibility fallback)."""
+    return jax.tree.map(
+        lambda axes, s: logical_to_pspec(axes, rules, shape=s.shape, mesh=mesh),
+        logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def sharding_tree(logical_tree, shape_tree, rules, mesh):
+    specs = spec_tree(logical_tree, shape_tree, rules, mesh)
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_sharding(mesh, rules):
+    """Sharding for (B, ...) host-data arrays: batch over data axes."""
+    return NamedSharding(mesh, P(rules["batch"]))
+
+
+def sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype), sharding=sharding)

@@ -1,0 +1,238 @@
+"""Step builders: compose Model x mesh x optimizer into jit-able
+train_step / prefill / decode_step functions together with fully-sharded
+input ShapeDtypeStructs (what the dry-run lowers and what train.py runs).
+
+Shape kinds (configs/base.SHAPES):
+  train    -> train_step(state, batch)  [fp32 master params + opt state]
+  prefill  -> prefill(params, batch)    [bf16 serving params]
+  decode   -> decode_step(params, cache, token, pos)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import sharding_ctx
+from repro.models.model import Model
+from repro.optim import make_optimizer, make_schedule
+from repro.launch.sharding import make_rules, sharding_tree, sds
+
+
+@dataclass
+class StepBundle:
+    kind: str
+    fn: Callable                 # python fn (enter sharding ctx at trace)
+    in_specs: tuple              # ShapeDtypeStructs with shardings
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple
+    model: Model
+    rules: dict
+    meta: dict
+
+    def jitted(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        return self.jitted().lower(*self.in_specs)
+
+
+def _cast_like(tree, shape_tree):
+    return jax.tree.map(lambda x, s: x.astype(s.dtype), tree, shape_tree)
+
+
+def make_schedule_for(cfg, total_steps=10000):
+    return make_schedule(cfg.schedule, peak_lr=3e-4,
+                         warmup_steps=max(1, total_steps // 100),
+                         total_steps=total_steps)
+
+
+def batch_specs(cfg, shape, mesh=None, rules=None):
+    """ShapeDtypeStructs for the host data batch of this (arch, shape)."""
+    GB, S = shape.global_batch, shape.seq_len
+    sh = None
+    if mesh is not None:
+        n_data = int(np.prod([mesh.shape[a] for a in rules["batch"]]))
+        spec = P(rules["batch"]) if GB % max(n_data, 1) == 0 else P()
+        sh = NamedSharding(mesh, spec)
+    out = {}
+    if cfg.family == "vlm":
+        st = S - cfg.n_patches
+        out["tokens"] = sds((GB, st), jnp.int32, sh)
+        out["labels"] = sds((GB, st), jnp.int32, sh)
+        out["patches"] = sds((GB, cfg.n_patches, cfg.d_model), jnp.bfloat16, sh)
+    else:
+        out["tokens"] = sds((GB, S), jnp.int32, sh)
+        out["labels"] = sds((GB, S), jnp.int32, sh)
+        if cfg.family == "audio":
+            out["frames"] = sds((GB, cfg.enc_frames, cfg.d_model), jnp.bfloat16, sh)
+    return out
+
+
+def build(cfg, mesh, shape, *, block_skip=False, microbatches=1,
+          total_steps=10000, moment_dtype=jnp.float32, rules_kind=None):
+    rules = make_rules(mesh, batch_size=shape.global_batch,
+                       kind=rules_kind or shape.kind)
+    model = Model(cfg, mesh=mesh, block_skip=block_skip)
+    pspecs = model.param_specs()
+    pshapes = jax.eval_shape(model.init, jax.random.key(0))
+
+    if shape.kind == "train":
+        return _build_train(cfg, mesh, shape, model, rules, pspecs, pshapes,
+                            microbatches, total_steps, moment_dtype)
+    if shape.kind == "prefill":
+        return _build_prefill(cfg, mesh, shape, model, rules, pspecs, pshapes)
+    return _build_decode(cfg, mesh, shape, model, rules, pspecs, pshapes)
+
+
+# ---------------------------------------------------------------------------
+
+def _build_train(cfg, mesh, shape, model, rules, pspecs, pshapes,
+                 microbatches, total_steps, moment_dtype):
+    opt = make_optimizer(cfg, make_schedule_for(cfg, total_steps),
+                         moment_dtype=moment_dtype)
+    master_shapes = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), pshapes)
+    opt_shapes = jax.eval_shape(opt.init, master_shapes)
+    opt_specs = opt.state_specs(pspecs, master_shapes)
+
+    p_sh = sharding_tree(pspecs, master_shapes, rules, mesh)
+    o_sh = sharding_tree(opt_specs, opt_shapes, rules, mesh)
+    rep = NamedSharding(mesh, P())
+
+    bspecs = batch_specs(cfg, shape, mesh, rules)
+    state_specs_in = {
+        "params": jax.tree.map(lambda s, sh: sds(s.shape, s.dtype, sh),
+                               master_shapes, p_sh),
+        "opt": jax.tree.map(lambda s, sh: sds(s.shape, s.dtype, sh),
+                            opt_shapes, o_sh),
+        "step": sds((), jnp.int32, rep),
+    }
+    state_shardings = {"params": p_sh, "opt": o_sh, "step": rep}
+    metrics_shardings = {"loss": rep, "ce": rep, "aux": rep,
+                         "grad_norm": rep, "lr": rep}
+
+    def train_step(state, batch):
+        with sharding_ctx(mesh, rules):
+            def lossfn(master):
+                p = _cast_like(master, pshapes)  # fp32 master -> compute dtype
+                l, m = model.loss(p, batch)
+                return l, m
+
+            if microbatches > 1:
+                mb = jax.tree.map(
+                    lambda x: x.reshape(microbatches,
+                                        x.shape[0] // microbatches,
+                                        *x.shape[1:]), batch)
+
+                def acc_body(carry, mbatch):
+                    gsum, lsum, msum = carry
+                    def lf(master):
+                        p = _cast_like(master, pshapes)
+                        return model.loss(p, mbatch)
+                    (l, m), g = jax.value_and_grad(lf, has_aux=True)(
+                        state["params"])
+                    gsum = jax.tree.map(jnp.add, gsum, g)
+                    return (gsum, lsum + l, {k: msum[k] + m[k] for k in m}), None
+
+                g0 = jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32),
+                                  master_shapes)
+                (grads, loss, met), _ = jax.lax.scan(
+                    acc_body,
+                    (g0, jnp.float32(0), {"ce": jnp.float32(0), "aux": jnp.float32(0)}),
+                    mb)
+                grads = jax.tree.map(lambda g: g / microbatches, grads)
+                loss = loss / microbatches
+                met = {k: v / microbatches for k, v in met.items()}
+            else:
+                (loss, met), grads = jax.value_and_grad(lossfn, has_aux=True)(
+                    state["params"])
+
+            newp, newopt, stats = opt.update(grads, state["opt"],
+                                             state["params"], state["step"])
+            # NaN/overflow guard: a non-finite loss or grad norm turns the
+            # update into a no-op (state buffers are donated, so the guard
+            # must live inside the step, not in the host loop).
+            good = jnp.isfinite(loss) & jnp.isfinite(stats["grad_norm"])
+            sel = lambda a, b: jax.tree.map(
+                lambda x, y: jnp.where(good, x, y), a, b)
+            newp = sel(newp, state["params"])
+            newopt = sel(newopt, state["opt"])
+            metrics = {"loss": loss, "ce": met["ce"], "aux": met["aux"],
+                       "grad_norm": stats["grad_norm"], "lr": stats["lr"]}
+            return {"params": newp, "opt": newopt,
+                    "step": state["step"] + 1}, metrics
+
+    in_specs = (state_specs_in, bspecs)
+    in_shardings = (state_shardings,
+                    jax.tree.map(lambda s: s.sharding, bspecs))
+    out_shardings = (state_shardings, metrics_shardings)
+    return StepBundle("train", train_step, in_specs, in_shardings,
+                      out_shardings, (0,), model, rules,
+                      {"opt": opt, "pshapes": pshapes,
+                       "master_shapes": master_shapes, "opt_shapes": opt_shapes,
+                       "p_sh": p_sh, "o_sh": o_sh})
+
+
+def _build_prefill(cfg, mesh, shape, model, rules, pspecs, pshapes):
+    p_sh = sharding_tree(pspecs, pshapes, rules, mesh)
+    param_specs_in = jax.tree.map(lambda s, sh: sds(s.shape, s.dtype, sh),
+                                  pshapes, p_sh)
+    bspecs = batch_specs(cfg, shape, mesh, rules)
+    rep = NamedSharding(mesh, P())
+
+    def prefill(params, batch):
+        with sharding_ctx(mesh, rules):
+            logits, cache, pos = model.prefill(params, batch)
+            return logits, cache, pos
+
+    # cache out shardings: infer from cache specs
+    W = model.kv_window(shape.seq_len)
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, W))
+    c_sh = sharding_tree(model.cache_specs(), cache_shapes, rules, mesh)
+    out_shardings = (rep, c_sh, rep)
+    in_specs = (param_specs_in, bspecs)
+    in_shardings = (p_sh, jax.tree.map(lambda s: s.sharding, bspecs))
+    return StepBundle("prefill", prefill, in_specs, in_shardings,
+                      out_shardings, (), model, rules,
+                      {"p_sh": p_sh, "cache_shapes": cache_shapes,
+                       "c_sh": c_sh})
+
+
+def _build_decode(cfg, mesh, shape, model, rules, pspecs, pshapes):
+    p_sh = sharding_tree(pspecs, pshapes, rules, mesh)
+    param_specs_in = jax.tree.map(lambda s, sh: sds(s.shape, s.dtype, sh),
+                                  pshapes, p_sh)
+    GB = shape.global_batch
+    W = model.kv_window(shape.seq_len)
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(GB, W))
+    c_sh = sharding_tree(model.cache_specs(), cache_shapes, rules, mesh)
+    cache_specs_in = jax.tree.map(lambda s, sh: sds(s.shape, s.dtype, sh),
+                                  cache_shapes, c_sh)
+    n_data = int(np.prod([mesh.shape[a] for a in rules["batch"]]))
+    bspec = P(rules["batch"]) if GB % max(n_data, 1) == 0 else P()
+    bsh = NamedSharding(mesh, bspec)
+    rep = NamedSharding(mesh, P())
+
+    def decode_step(params, cache, token, pos):
+        with sharding_ctx(mesh, rules):
+            logits, cache = model.decode_step(params, cache, token, pos)
+            return logits, cache
+
+    in_specs = (param_specs_in, cache_specs_in,
+                sds((GB, 1), jnp.int32, bsh), sds((GB,), jnp.int32, bsh))
+    in_shardings = (p_sh, c_sh, bsh, bsh)
+    out_shardings = (bsh, c_sh)
+    return StepBundle("decode", decode_step, in_specs, in_shardings,
+                      out_shardings, (1,), model, rules,
+                      {"p_sh": p_sh, "cache_shapes": cache_shapes, "c_sh": c_sh})

@@ -1,0 +1,214 @@
+"""Shared model building blocks: norms, activations, RoPE, init, sharding ctx.
+
+Parameters are plain nested dicts of jnp arrays. Every init function has a
+`*_specs` twin returning the same tree with tuples of LOGICAL axis names
+(see launch/sharding.py for the logical->mesh rule table).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Sharding context: model code annotates activations with *logical* axes;
+# when a mesh context is active the annotation becomes a
+# with_sharding_constraint, otherwise it is a no-op (CPU smoke tests).
+# ---------------------------------------------------------------------------
+
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh, rules):
+    """rules: dict logical_axis -> mesh axis name (or tuple, or None)."""
+    prev = getattr(_CTX, "val", None)
+    _CTX.val = (mesh, rules)
+    try:
+        yield
+    finally:
+        _CTX.val = prev
+
+
+def logical_to_pspec(logical_axes, rules, shape=None, mesh=None):
+    """Map a tuple of logical axis names to a PartitionSpec via `rules`.
+
+    Divisibility fallback: if `shape`/`mesh` given and the dim size is not
+    divisible by the product of assigned mesh-axis sizes, replicate that dim.
+    A mesh axis may be used at most once in the spec (first logical axis wins).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    used = set()
+    out = []
+    for i, name in enumerate(logical_axes):
+        assign = rules.get(name)
+        if assign is None:
+            out.append(None)
+            continue
+        axes = assign if isinstance(assign, tuple) else (assign,)
+        axes = tuple(a for a in axes if a is not None and a not in used)
+        if not axes:
+            out.append(None)
+            continue
+        if shape is not None and mesh is not None:
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            if shape[i] % size != 0:
+                out.append(None)
+                continue
+        used.update(axes)
+        out.append(axes[0] if len(axes) == 1 else axes)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def current_mesh():
+    """The mesh of the active sharding context (None outside one)."""
+    ctx = getattr(_CTX, "val", None)
+    return ctx[0] if ctx is not None else None
+
+
+def shard_act(x, *logical_axes):
+    """Annotate activation x with logical axes; no-op without a mesh ctx."""
+    ctx = getattr(_CTX, "val", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    from jax.sharding import NamedSharding
+
+    spec = logical_to_pspec(logical_axes, rules, shape=x.shape, mesh=mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+def dtype_of(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def rms_norm(x, scale, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm(x, p, cfg):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def norm_init(cfg, d=None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), dtype_of(cfg))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype_of(cfg))
+    return p
+
+
+def norm_specs(cfg):
+    p = {"scale": ("embed",)}
+    if cfg.norm == "layernorm":
+        p["bias"] = ("embed",)
+    return p
+
+
+def act_fn(name):
+    return {"silu": jax.nn.silu, "gelu": partial(jax.nn.gelu, approximate=True)}[name]
+
+
+def dense_init(key, shape, dtype, scale=None):
+    """Truncated-normal fan-in init."""
+    fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+    std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding (computed on the fly from integer positions;
+# avoids multi-hundred-MB constant tables at 500k context).
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta):
+    """x: (..., S, H, hd), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(n, d):
+    pos = np.arange(n)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(out, jnp.float32)
+
+
+def sinusoid_at(pos, d):
+    """Sinusoidal embedding of integer positions. pos: (B,) -> (B, 1, d)."""
+    i = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos[:, None].astype(jnp.float32) / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, None, :]
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy: never materializes (B, S, V) logits in one piece.
+# ---------------------------------------------------------------------------
+
+def chunked_softmax_xent(h, w_unembed, labels, chunk=512, ignore_index=-100):
+    """h: (B, S, d) final hidden; w_unembed: (d, V); labels: (B, S) int32.
+
+    Returns mean CE over non-ignored positions (fp32). Scans over S chunks so
+    peak logits memory is (B, chunk, V).
+    """
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def one(hc, lc):
+        # remat: the (B, chunk, V) logits block is recomputed in the backward
+        # pass instead of being saved per scan iteration (which would cost
+        # n_chunks x B x chunk x V x 4 bytes of residuals).
+        logits = jnp.einsum("bsd,dv->bsv", hc, w_unembed, preferred_element_type=jnp.float32)
+        logits = shard_act(logits, "batch", "seq", "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        safe = jnp.clip(lc, 0, logits.shape[-1] - 1)
+        tgt = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        mask = (lc != ignore_index).astype(jnp.float32)
+        return jnp.sum((lse - tgt) * mask), jnp.sum(mask)
+
+    def body(carry, xs):
+        hc, lc = xs
+        s, c = one(hc, lc)
+        return (carry[0] + s, carry[1] + c), None
+
+    hs = h[:, : n * chunk].reshape(B, n, chunk, d).swapaxes(0, 1)
+    ls = labels[:, : n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (hs, ls))
+    if rem:
+        s, c = one(h[:, n * chunk :], labels[:, n * chunk :])
+        tot, cnt = tot + s, cnt + c
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,185 @@
+"""Mamba2 (SSD) block: chunkwise-parallel selective state-space layer.
+
+Train/prefill runs the chunked dual form (intra-chunk "attention-like"
+matmuls + inter-chunk state scan) with chunk size `CHUNK`; all decays are
+log-space cumulative sums with da <= 0, so every exp() factor is <= 1 and
+the computation is stable in fp32 without a max-stabilizer.
+
+Decode advances the recurrent state (B, H, P, N) one token at a time with
+a depthwise-conv ring cache of the last k-1 inputs.
+
+Used by zamba2-2.7b (54 Mamba2 layers + shared attention, see model.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init, dtype_of, rms_norm, shard_act
+
+CHUNK = 256
+
+
+def dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_headdim
+    conv_dim = d_inner + 2 * cfg.ssm_state
+    return d_inner, n_heads, conv_dim
+
+
+def init(key, cfg):
+    d = cfg.d_model
+    di, nh, cdim = dims(cfg)
+    N = cfg.ssm_state
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    # dt_bias init so softplus(dt_bias) ~ U[1e-3, 1e-1] (mamba2 default).
+    u = jax.random.uniform(ks[3], (nh,), jnp.float32, 1e-3, 1e-1)
+    dt_bias = u + jnp.log(-jnp.expm1(-u))  # inverse softplus
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di + 2 * N + nh), dt),
+        "conv_w": dense_init(ks[1], (cfg.conv_kernel, cdim), dt, scale=0.5),
+        "conv_b": jnp.zeros((cdim,), dt),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm": jnp.ones((di,), dt),
+        "w_out": dense_init(ks[2], (di, d), dt),
+    }
+
+
+def specs(cfg):
+    return {
+        "w_in": ("embed", "inner_all"),
+        "conv_w": (None, "conv_dim"),
+        "conv_b": ("conv_dim",),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "norm": ("inner",),
+        "w_out": ("inner", "embed"),
+    }
+
+
+def _causal_conv(u, w, b, init_state=None):
+    """Depthwise causal conv. u: (B, S, C); w: (k, C). Returns same shape.
+
+    init_state: (B, k-1, C) history (decode prefill continuation) or None.
+    """
+    k = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    else:
+        pad = init_state.astype(u.dtype)
+    x = jnp.concatenate([pad, u], axis=1)
+    out = sum(x[:, i : i + u.shape[1]] * w[i] for i in range(k))
+    return out + b
+
+
+def _split(cfg, zxbcdt):
+    di, nh, _ = dims(cfg)
+    N = cfg.ssm_state
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : 2 * di + 2 * N]
+    dt_raw = zxbcdt[..., 2 * di + 2 * N :]
+    return z, xBC, dt_raw
+
+
+def apply(p, x, cfg, conv_state=None, ssm_state=None, return_state=False):
+    """x: (B, S, d_model) -> (B, S, d_model). Chunked SSD.
+
+    If return_state, also returns (conv_state (B,k-1,cdim), ssm_state
+    (B,H,P,N) fp32) for seeding subsequent decode.
+    """
+    B, S, d = x.shape
+    di, nh, cdim = dims(cfg)
+    N, P = cfg.ssm_state, cfg.ssm_headdim
+    Q = min(CHUNK, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xBC, dt_raw = _split(cfg, zxbcdt)
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state))
+    xc = xBC[..., :di].reshape(B, S, nh, P)
+    Bm = xBC[..., di : di + N].astype(jnp.float32)
+    Cm = xBC[..., di + N :].astype(jnp.float32)
+    xc = shard_act(xc, "batch", "seq", "ssm_heads", None)
+
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,) < 0
+    da = dtv * A  # (B,S,H) <= 0
+
+    # chunk views: (nc, B, Q, ...)
+    def chunked(t):
+        return t.reshape(B, nc, Q, *t.shape[2:]).swapaxes(0, 1)
+
+    xcc, Bc, Cc, dtc, dac = map(chunked, (xc.astype(jnp.float32), Bm, Cm, dtv, da))
+
+    def body(state, xs):
+        xq, Bq, Cq, dtq, daq = xs  # (B,Q,...)
+        cum = jnp.cumsum(daq, axis=1)  # (B,Q,H)
+        # intra-chunk: w[b,h,i,j] = (C_i . B_j) exp(cum_i - cum_j) dt_j, j<=i
+        cb = jnp.einsum("bqn,bsn->bqs", Cq, Bq)  # (B,Q,Q)
+        dec = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,Q,Q,H)
+        causal = jnp.tril(jnp.ones((Q, Q), bool))
+        w = cb[..., None] * dec * dtq[:, None, :, :]
+        w = jnp.where(causal[None, :, :, None], w, 0.0)
+        y = jnp.einsum("bqsh,bshp->bqhp", w, xq)
+        # inter-chunk: contribution of incoming state
+        y += jnp.einsum("bqn,bhpn,bqh->bqhp", Cq, state, jnp.exp(cum))
+        # state update
+        rem = jnp.exp(cum[:, -1:, :] - cum)  # exp(cum_Q - cum_j)
+        st = jnp.einsum("bqh,bqn,bqhp->bhpn", rem * dtq, Bq, xq)
+        state = state * jnp.exp(cum[:, -1])[:, :, None, None] + st
+        return state, y
+
+    state0 = (
+        jnp.zeros((B, nh, P, N), jnp.float32) if ssm_state is None else ssm_state
+    )
+    state, yc = jax.lax.scan(body, state0, (xcc, Bc, Cc, dtc, dac))
+    y = yc.swapaxes(0, 1).reshape(B, S, nh, P)
+    y = y + p["D"][None, None, :, None] * xc.astype(jnp.float32)
+    y = y.reshape(B, S, di)
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    out = shard_act(out, "batch", "seq", "embed")
+    if return_state:
+        k = cfg.conv_kernel
+        pad = jnp.zeros((B, max(k - 1 - S, 0), cdim), xBC.dtype)
+        raw = jnp.einsum("bsd,de->bse", x[:, max(S - (k - 1), 0):], p["w_in"])
+        _, hist, _ = _split(cfg, raw)
+        conv_state = jnp.concatenate([pad, hist], axis=1)
+        return out, conv_state, state
+    return out
+
+
+def decode_step(p, x, conv_state, ssm_state, cfg):
+    """x: (B, 1, d). conv_state: (B, k-1, cdim) pre-activation history.
+    ssm_state: (B, H, P, N) fp32. Returns (out (B,1,d), conv_state, ssm_state).
+    """
+    B = x.shape[0]
+    di, nh, cdim = dims(cfg)
+    N, P = cfg.ssm_state, cfg.ssm_headdim
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xBC_raw, dt_raw = _split(cfg, zxbcdt)
+    hist = jnp.concatenate([conv_state, xBC_raw], axis=1)  # (B, k, cdim)
+    conv_state = hist[:, 1:]
+    xBC = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"])
+    xc = xBC[:, :di].reshape(B, nh, P).astype(jnp.float32)
+    Bm = xBC[:, di : di + N].astype(jnp.float32)
+    Cm = xBC[:, di + N :].astype(jnp.float32)
+
+    dtv = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dtv * A)  # (B,H)
+    ssm_state = ssm_state * decay[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dtv, Bm, xc
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cm, ssm_state) + p["D"][None, :, None] * xc
+    y = y.reshape(B, 1, di)
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, conv_state, ssm_state

@@ -1,0 +1,224 @@
+"""Transformer blocks: dense (attn + gated MLP), MoE, encoder and
+decoder-with-cross-attention variants. Residual wiring + norms live here;
+attention math in attention.py, MoE math in moe.py.
+
+Every block exposes init / specs / apply(+decode) with params as plain
+dicts so model.py can stack them over layers and lax.scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention, moe
+from repro.models.common import (act_fn, dense_init, dtype_of, norm,
+                                 norm_init, norm_specs, shard_act)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(ks[0], (d, f), dt),
+        "w3": dense_init(ks[1], (d, f), dt),
+        "w2": dense_init(ks[2], (f, d), dt, scale=1.0 / np.sqrt(f)),
+    }
+
+
+def mlp_specs(cfg):
+    return {"w1": ("embed", "mlp"), "w3": ("embed", "mlp"), "w2": ("mlp", "embed")}
+
+
+def mlp_apply(p, x, cfg):
+    act = act_fn(cfg.act)
+    h = act(jnp.einsum("bsd,df->bsf", x, p["w1"])) * jnp.einsum(
+        "bsd,df->bsf", x, p["w3"])
+    h = shard_act(h, "batch", "seq", "mlp")
+    out = jnp.einsum("bsf,fd->bsd", h, p["w2"])
+    return shard_act(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Dense decoder block (llama/qwen/minicpm/internvl2 backbone)
+# ---------------------------------------------------------------------------
+
+def dense_block_init(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "n1": norm_init(cfg),
+        "attn": attention.init(ks[0], cfg),
+        "n2": norm_init(cfg),
+        "mlp": mlp_init(ks[1], cfg),
+    }
+
+
+def dense_block_specs(cfg):
+    return {
+        "n1": norm_specs(cfg),
+        "attn": attention.specs(cfg),
+        "n2": norm_specs(cfg),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def dense_block_apply(p, x, positions, cfg, block_skip=False):
+    a, _, _ = attention.attend_train(p["attn"], norm(x, p["n1"], cfg), positions,
+                                     cfg, block_skip=block_skip)
+    x = x + a
+    return x + mlp_apply(p["mlp"], norm(x, p["n2"], cfg), cfg)
+
+
+def dense_block_prefill(p, x, positions, cfg):
+    a, k, v = attention.attend_train(p["attn"], norm(x, p["n1"], cfg), positions, cfg)
+    x = x + a
+    return x + mlp_apply(p["mlp"], norm(x, p["n2"], cfg), cfg), (k, v)
+
+
+def dense_block_decode(p, x, ck, cv, pos, cfg, ring=False, scales=None):
+    out = attention.decode(p["attn"], norm(x, p["n1"], cfg), ck, cv, pos,
+                           cfg, ring=ring, scales=scales)
+    a, ck, cv = out[:3]
+    x = x + a
+    y = x + mlp_apply(p["mlp"], norm(x, p["n2"], cfg), cfg)
+    if scales is not None:
+        return y, ck, cv, out[3]
+    return y, ck, cv
+
+
+# ---------------------------------------------------------------------------
+# MoE decoder block (mixtral / arctic). arctic adds a parallel dense
+# residual MLP alongside the MoE FFN (dense-MoE hybrid).
+# ---------------------------------------------------------------------------
+
+def moe_block_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    p = {
+        "n1": norm_init(cfg),
+        "attn": attention.init(ks[0], cfg),
+        "n2": norm_init(cfg),
+        "moe": moe.init(ks[1], cfg),
+    }
+    if cfg.moe_dense_ff:
+        p["dense_mlp"] = mlp_init(ks[2], cfg, d_ff=cfg.moe_dense_ff)
+    return p
+
+
+def moe_block_specs(cfg):
+    p = {
+        "n1": norm_specs(cfg),
+        "attn": attention.specs(cfg),
+        "n2": norm_specs(cfg),
+        "moe": moe.specs(cfg),
+    }
+    if cfg.moe_dense_ff:
+        p["dense_mlp"] = mlp_specs(cfg)
+    return p
+
+
+def _moe_ffn(p, h, cfg, mesh):
+    y, aux = moe.apply(p["moe"], h, cfg, mesh=mesh)
+    if cfg.moe_dense_ff:
+        y = y + mlp_apply(p["dense_mlp"], h, cfg)
+    return y, aux
+
+
+def moe_block_apply(p, x, positions, cfg, mesh=None, block_skip=False):
+    a, _, _ = attention.attend_train(p["attn"], norm(x, p["n1"], cfg), positions,
+                                     cfg, block_skip=block_skip)
+    x = x + a
+    y, aux = _moe_ffn(p, norm(x, p["n2"], cfg), cfg, mesh)
+    return x + y, aux
+
+
+def moe_block_prefill(p, x, positions, cfg, mesh=None):
+    a, k, v = attention.attend_train(p["attn"], norm(x, p["n1"], cfg), positions, cfg)
+    x = x + a
+    y, aux = _moe_ffn(p, norm(x, p["n2"], cfg), cfg, mesh)
+    return x + y, (k, v), aux
+
+
+def moe_block_decode(p, x, ck, cv, pos, cfg, mesh=None, ring=False,
+                     scales=None):
+    out = attention.decode(p["attn"], norm(x, p["n1"], cfg), ck, cv, pos,
+                           cfg, ring=ring, scales=scales)
+    a, ck, cv = out[:3]
+    x = x + a
+    y, _ = _moe_ffn(p, norm(x, p["n2"], cfg), cfg, mesh)
+    if scales is not None:
+        return x + y, ck, cv, out[3]
+    return x + y, ck, cv
+
+
+# ---------------------------------------------------------------------------
+# Encoder block (whisper encoder: bidirectional, layernorm+gelu)
+# ---------------------------------------------------------------------------
+
+def enc_block_init(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "n1": norm_init(cfg),
+        "attn": attention.init(ks[0], cfg),
+        "n2": norm_init(cfg),
+        "mlp": mlp_init(ks[1], cfg),
+    }
+
+
+enc_block_specs = dense_block_specs
+
+
+def enc_block_apply(p, x, cfg):
+    a, _, _ = attention.attend_train(p["attn"], norm(x, p["n1"], cfg), None, cfg,
+                                     use_rope=False, causal=False)
+    x = x + a
+    return x + mlp_apply(p["mlp"], norm(x, p["n2"], cfg), cfg)
+
+
+# ---------------------------------------------------------------------------
+# Decoder block with cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def xdec_block_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "n1": norm_init(cfg),
+        "attn": attention.init(ks[0], cfg),
+        "n2": norm_init(cfg),
+        "xattn": attention.init(ks[1], cfg),
+        "n3": norm_init(cfg),
+        "mlp": mlp_init(ks[2], cfg),
+    }
+
+
+def xdec_block_specs(cfg):
+    return {
+        "n1": norm_specs(cfg),
+        "attn": attention.specs(cfg),
+        "n2": norm_specs(cfg),
+        "xattn": attention.specs(cfg),
+        "n3": norm_specs(cfg),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def xdec_block_apply(p, x, enc_out, positions, cfg):
+    a, k, v = attention.attend_train(p["attn"], norm(x, p["n1"], cfg), positions,
+                                     cfg, use_rope=False)
+    x = x + a
+    xk, xv = attention.cross_kv(p["xattn"], enc_out)
+    x = x + attention.cross_attend_train(p["xattn"], norm(x, p["n2"], cfg),
+                                         (xk, xv), cfg)
+    return x + mlp_apply(p["mlp"], norm(x, p["n3"], cfg), cfg), (k, v), (xk, xv)
+
+
+def xdec_block_decode(p, x, ck, cv, xk, xv, pos, cfg):
+    a, ck, cv = attention.decode(p["attn"], norm(x, p["n1"], cfg), ck, cv, pos,
+                                 cfg, use_rope=False)
+    x = x + a
+    x = x + attention.cross_decode(p["xattn"], norm(x, p["n2"], cfg), xk, xv)
+    return x + mlp_apply(p["mlp"], norm(x, p["n3"], cfg), cfg), ck, cv

@@ -1,0 +1,304 @@
+"""xLSTM blocks: mLSTM (matrix-memory, chunkwise-parallel) and sLSTM
+(scalar-memory, sequential scan).
+
+mLSTM follows the stabilized chunkwise form: per-position stabilizer
+m_i = max(b_i + m_prev, max_{j<=i}(b_i - b_j + i~_j)) where b is the
+intra-chunk cumulative log-forget and i~ the log input gate; every exp()
+is then <= 1. The recurrent state is (C (B,H,Dq,Dv), n (B,H,Dq), m (B,H))
+carried across chunks by lax.scan and across decode steps one token at a
+time. Correctness of chunked == sequential is asserted in
+tests/test_models.py.
+
+Block layout (xLSTM paper, arXiv:2405.04517): mLSTM is a pre-LN residual
+block with 2x up-projection, causal conv4 + silu for q/k, per-head gates,
+headwise GroupNorm, learnable skip and silu(z) gating. sLSTM is a pre-LN
+residual block with a 4-gate recurrent cell (block-diagonal recurrent
+matrix over heads) followed by a GeGLU FFN of factor 4/3.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init, dtype_of, rms_norm, shard_act
+
+CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def m_dims(cfg):
+    inner = int(cfg.mlstm_proj_factor * cfg.d_model)
+    nh = cfg.n_heads
+    hd_v = inner // nh
+    hd_qk = cfg.hd()
+    return inner, nh, hd_qk, hd_v
+
+
+def m_init(key, cfg):
+    d = cfg.d_model
+    inner, nh, hq, hv = m_dims(cfg)
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": dense_init(ks[0], (d, inner), dt),
+        "w_z": dense_init(ks[1], (d, inner), dt),
+        "conv_w": dense_init(ks[2], (4, inner), dt, scale=0.5),
+        "conv_b": jnp.zeros((inner,), dt),
+        "wq": dense_init(ks[3], (inner, nh, hq), dt),
+        "wk": dense_init(ks[4], (inner, nh, hq), dt),
+        "w_if": dense_init(ks[5], (inner, nh, 2), jnp.float32, scale=0.01),
+        "b_if": jnp.concatenate([jnp.zeros((nh, 1)), jnp.linspace(3.0, 6.0, nh)[:, None]], -1),
+        "gn": jnp.ones((nh, hv), dt),
+        "skip": jnp.zeros((inner,), dt),
+        "w_down": dense_init(ks[6], (inner, d), dt),
+    }
+
+
+def m_specs(cfg):
+    return {
+        "w_up": ("embed", "inner"),
+        "w_z": ("embed", "inner"),
+        "conv_w": (None, "inner"),
+        "conv_b": ("inner",),
+        "wq": ("inner", "heads", "head_dim"),
+        "wk": ("inner", "heads", "head_dim"),
+        "w_if": ("inner", "heads", None),
+        "b_if": ("heads", None),
+        "gn": ("heads", None),
+        "skip": ("inner",),
+        "w_down": ("inner", "embed"),
+    }
+
+
+def _conv4(u, w, b, hist=None):
+    k = w.shape[0]
+    pad = (
+        jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+        if hist is None
+        else hist.astype(u.dtype)
+    )
+    x = jnp.concatenate([pad, u], axis=1)
+    return sum(x[:, i : i + u.shape[1]] * w[i] for i in range(k)) + b
+
+
+def _headnorm(h, gn, eps):
+    """Per-head groupnorm on (..., H, Dv)."""
+    hf = h.astype(jnp.float32)
+    mu = jnp.mean(hf, axis=-1, keepdims=True)
+    var = jnp.var(hf, axis=-1, keepdims=True)
+    return (hf - mu) * jax.lax.rsqrt(var + eps) * gn.astype(jnp.float32)
+
+
+def m_apply(p, x, cfg, state=None, return_state=False):
+    """x: (B, S, d) -> (B, S, d), chunkwise-parallel stabilized mLSTM."""
+    B, S, d = x.shape
+    inner, nh, hq, hv = m_dims(cfg)
+    Q = min(CHUNK, S)
+    assert S % Q == 0
+    nc = S // Q
+    scale = 1.0 / np.sqrt(hq)
+
+    u = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"])
+    c = jax.nn.silu(_conv4(u, p["conv_w"], p["conv_b"]))
+    q = jnp.einsum("bse,ehk->bshk", c, p["wq"]) * scale
+    k = jnp.einsum("bse,ehk->bshk", c, p["wk"])
+    v = u.reshape(B, S, nh, hv)
+    gif = jnp.einsum("bse,ehg->bshg", c.astype(jnp.float32), p["w_if"]) + p["b_if"]
+    ig = gif[..., 0]                       # (B,S,H) log input gate
+    lf = jax.nn.log_sigmoid(gif[..., 1])   # (B,S,H) log forget gate <= 0
+    q = shard_act(q, "batch", "seq", "heads", None)
+    k = shard_act(k, "batch", "seq", "heads", None)
+    v = shard_act(v, "batch", "seq", "heads", None)
+
+    def chunked(t):
+        return t.reshape(B, nc, Q, *t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, igc, lfc = map(
+        chunked, (q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), ig, lf)
+    )
+
+    def body(carry, xs):
+        C, n, m = carry  # (B,H,Dq,Dv), (B,H,Dq), (B,H)
+        qq, kk, vv, ii, ff = xs
+        b = jnp.cumsum(ff, axis=1)  # (B,Q,H) intra-chunk cum log-forget
+        # log weights of intra contributions: g[i,j] = b_i - b_j + i~_j (j<=i)
+        g = b[:, :, None, :] - b[:, None, :, :] + ii[:, None, :, :]
+        causal = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+        g = jnp.where(causal, g, -jnp.inf)
+        m_intra = jnp.max(g, axis=2)  # (B,Q,H)
+        m_inter = b + m[:, None, :]  # (B,Q,H)
+        mi = jnp.maximum(m_intra, m_inter)
+        mi = jnp.maximum(mi, -1e30)  # guard all--inf rows
+        w = jnp.exp(g - mi[:, :, None, :])  # (B,Q,Q,H) <= 1
+        s = jnp.einsum("bqhk,bshk->bqsh", qq, kk)
+        h_intra = jnp.einsum("bqsh,bqsh,bshv->bqhv", s, w, vv)
+        dec = jnp.exp(m_inter - mi)  # (B,Q,H)
+        h_inter = jnp.einsum("bqhk,bhkv,bqh->bqhv", qq, C, dec)
+        h_num = h_intra + h_inter
+        n_i = jnp.einsum("bqsh,bshk->bqhk", w, kk) + dec[..., None] * n[:, None]
+        qn = jnp.abs(jnp.einsum("bqhk,bqhk->bqh", qq, n_i))
+        h = h_num / jnp.maximum(qn, jnp.exp(-mi))[..., None]
+        # ---- state update to end of chunk ----
+        bQ = b[:, -1]  # (B,H)
+        g_st = bQ[:, None, :] - b + ii  # (B,Q,H) weight of each j into state
+        m_new = jnp.maximum(jnp.max(g_st, axis=1), bQ + m)
+        w_st = jnp.exp(g_st - m_new[:, None, :])
+        C = C * jnp.exp(bQ + m - m_new)[..., None, None] + jnp.einsum(
+            "bqh,bqhk,bqhv->bhkv", w_st, kk, vv
+        )
+        n = n * jnp.exp(bQ + m - m_new)[..., None] + jnp.einsum(
+            "bqh,bqhk->bhk", w_st, kk
+        )
+        return (C, n, m_new), h
+
+    if state is None:
+        C0 = jnp.zeros((B, nh, hq, hv), jnp.float32)
+        n0 = jnp.zeros((B, nh, hq), jnp.float32)
+        m0 = jnp.full((B, nh), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+    (C, n, m), hc = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, igc, lfc))
+    h = hc.swapaxes(0, 1).reshape(B, S, nh, hv)
+    h = _headnorm(h, p["gn"], cfg.norm_eps).reshape(B, S, inner)
+    h = (h + p["skip"].astype(jnp.float32) * c.astype(jnp.float32)) * jax.nn.silu(
+        z.astype(jnp.float32)
+    )
+    out = jnp.einsum("bse,ed->bsd", h.astype(x.dtype), p["w_down"])
+    out = shard_act(out, "batch", "seq", "embed")
+    if return_state:
+        kk = cfg.conv_kernel if cfg.conv_kernel else 4
+        hist = u[:, max(S - 3, 0):]
+        pad = jnp.zeros((B, max(3 - S, 0), inner), u.dtype)
+        return out, (jnp.concatenate([pad, hist], 1), (C, n, m))
+    return out
+
+
+def m_decode(p, x, conv_hist, state, cfg):
+    """One-token mLSTM step. x: (B,1,d); conv_hist: (B,3,inner);
+    state: (C,n,m). Returns (out, conv_hist, state)."""
+    B = x.shape[0]
+    inner, nh, hq, hv = m_dims(cfg)
+    scale = 1.0 / np.sqrt(hq)
+
+    u = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"])
+    hist = jnp.concatenate([conv_hist, u], axis=1)  # (B,4,inner)
+    conv_hist = hist[:, 1:]
+    c = jax.nn.silu(jnp.einsum("bke,ke->be", hist, p["conv_w"]) + p["conv_b"])
+    q = jnp.einsum("be,ehk->bhk", c, p["wq"]).astype(jnp.float32) * scale
+    k = jnp.einsum("be,ehk->bhk", c, p["wk"]).astype(jnp.float32)
+    v = u[:, 0].reshape(B, nh, hv).astype(jnp.float32)
+    gif = jnp.einsum("be,ehg->bhg", c.astype(jnp.float32), p["w_if"]) + p["b_if"]
+    ii, ff = gif[..., 0], jax.nn.log_sigmoid(gif[..., 1])
+
+    C, n, m = state
+    m_new = jnp.maximum(ff + m, ii)
+    fd = jnp.exp(ff + m - m_new)[..., None]
+    iw = jnp.exp(ii - m_new)[..., None]
+    C = C * fd[..., None] + (iw * k)[..., None] * v[:, :, None, :]
+    n = n * fd + iw * k
+    h_num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    qn = jnp.abs(jnp.einsum("bhk,bhk->bh", q, n))
+    h = h_num / jnp.maximum(qn, jnp.exp(-m_new))[..., None]
+    h = _headnorm(h, p["gn"], cfg.norm_eps).reshape(B, inner)
+    h = (h + p["skip"].astype(jnp.float32) * c.astype(jnp.float32)) * jax.nn.silu(
+        z[:, 0].astype(jnp.float32)
+    )
+    out = jnp.einsum("be,ed->bd", h.astype(x.dtype), p["w_down"])[:, None]
+    return out, conv_hist, (C, n, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def s_dims(cfg):
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    ff = int(round(cfg.d_model * 4 / 3 / 64)) * 64
+    return nh, dh, ff
+
+
+def s_init(key, cfg):
+    d = cfg.d_model
+    nh, dh, ff = s_dims(cfg)
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "w": dense_init(ks[0], (d, 4, d), dt),  # gates z,i,f,o from input
+        "r": dense_init(ks[1], (nh, dh, 4, dh), dt, scale=0.01),  # recurrent (blockdiag)
+        "b": jnp.zeros((4, d), jnp.float32).at[2].set(
+            jnp.tile(jnp.linspace(3.0, 6.0, dh), nh)
+        ),
+        "gn": jnp.ones((d,), dt),
+        "w_ff1": dense_init(ks[2], (d, 2 * ff), dt),
+        "w_ff2": dense_init(ks[3], (ff, d), dt),
+    }
+
+
+def s_specs(cfg):
+    return {
+        "w": ("embed", None, "inner"),
+        "r": ("heads", None, None, None),
+        "b": (None, "inner"),
+        "gn": ("embed",),
+        "w_ff1": ("embed", "mlp"),
+        "w_ff2": ("mlp", "embed"),
+    }
+
+
+def _s_cell(p, wx_t, state, cfg):
+    """One sLSTM timestep. wx_t: (B,4,d) precomputed input contribution."""
+    nh, dh, _ = s_dims(cfg)
+    h, c, n, m = state  # h,c,n: (B,d); m: (B,d)
+    B, d = h.shape
+    hh = h.reshape(B, nh, dh)
+    rh = jnp.einsum("bhk,hkgl->bhgl", hh.astype(jnp.float32), p["r"].astype(jnp.float32))
+    g = wx_t.astype(jnp.float32).reshape(B, 4, nh, dh) + rh.transpose(0, 2, 1, 3)
+    g = g.reshape(B, 4, d) + p["b"]
+    zt = jnp.tanh(g[:, 0])
+    it = g[:, 1]                      # log-space input gate
+    ft = jax.nn.log_sigmoid(g[:, 2])  # log-space forget gate
+    ot = jax.nn.sigmoid(g[:, 3])
+    m_new = jnp.maximum(ft + m, it)
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(ft + m - m_new)
+    c_new = f_ * c + i_ * zt
+    n_new = f_ * n + i_
+    h_new = ot * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return h_new, c_new, n_new, m_new
+
+
+def s_apply(p, x, cfg, state=None, return_state=False):
+    """x: (B, S, d). Sequential scan over S (inherently serial)."""
+    B, S, d = x.shape
+    wx = jnp.einsum("bsd,dge->bsge", x, p["w"])  # (B,S,4,d)
+    if state is None:
+        z = jnp.zeros((B, d), jnp.float32)
+        state = (z, z, z, jnp.full((B, d), -1e30, jnp.float32))
+
+    def body(st, wx_t):
+        h, c, n, m = _s_cell(p, wx_t, st, cfg)
+        return (h, c, n, m), h
+
+    state, hs = jax.lax.scan(body, state, wx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1)  # (B,S,d)
+    h = rms_norm(h.astype(x.dtype), p["gn"], cfg.norm_eps)
+    # GeGLU FFN
+    ff = jnp.einsum("bsd,df->bsf", h, p["w_ff1"])
+    a, b = jnp.split(ff, 2, axis=-1)
+    out = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(a.astype(jnp.float32)).astype(x.dtype) * b, p["w_ff2"])
+    out = shard_act(out, "batch", "seq", "embed")
+    if return_state:
+        return out, state
+    return out
+
+
+def s_decode(p, x, state, cfg):
+    out, state = s_apply(p, x, cfg, state=state, return_state=True)
+    return out, state

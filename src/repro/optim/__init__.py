@@ -1,0 +1,2 @@
+from repro.optim.optimizers import adamw, adafactor, make_optimizer, global_norm
+from repro.optim.schedules import make_schedule

@@ -1,0 +1,74 @@
+"""Gradient compression: int8 + error feedback (beyond-paper
+distributed-optimization trick, DESIGN.md §5).
+
+At 1000+ node scale the cross-pod (DCI) gradient all-reduce is the
+bandwidth wall. `compress_grads`/`decompress_grads` implement symmetric
+per-tensor-block int8 quantization with an ERROR-FEEDBACK residual (the
+quantization error is carried into the next step's gradient, so the
+compressed-SGD fixed point matches the uncompressed one — Seide et al. /
+EF-SGD). Wire cost: 8 bits + one fp32 scale per block of 1024 vs 32 bits:
+~3.97x less gradient traffic.
+
+Usage (training/loop or steps):
+    cgrads, new_err = compress_grads(grads, err)
+    # all-reduce cgrads.q (int8) and cgrads.scale instead of fp32 grads
+    grads = decompress_grads(cgrads)
+
+The dry-run path keeps fp32 all-reduce by default; enable with
+steps.build(..., grad_compression=True) to lower the compressed variant
+(the int8 all-reduce shows up in §Roofline's wire bytes at ~1/4 size).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 1024
+
+
+class Compressed(NamedTuple):
+    q: jnp.ndarray        # int8 flat blocks
+    scale: jnp.ndarray    # fp32 per block
+    shape: tuple
+    n: int
+
+
+def _compress_one(g, e):
+    g32 = g.astype(jnp.float32) + (e if e is not None else 0.0)
+    flat = g32.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    fb = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(fb), axis=1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(fb / scale[:, None]), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:n]
+    err = (flat - deq).reshape(g.shape)         # error feedback residual
+    return Compressed(q, scale, g.shape, n), err
+
+
+def compress_grads(grads, err_tree=None):
+    if err_tree is None:
+        err_tree = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                                grads)
+    out = jax.tree.map(_compress_one, grads, err_tree)
+    comp = jax.tree.map(lambda o: o[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple) and
+                        isinstance(x[0], Compressed))
+    err = jax.tree.map(lambda o: o[1], out,
+                       is_leaf=lambda x: isinstance(x, tuple) and
+                       isinstance(x[0], Compressed))
+    return comp, err
+
+
+def decompress_grads(comp):
+    def one(c: Compressed):
+        deq = (c.q.astype(jnp.float32) * c.scale[:, None]).reshape(-1)[:c.n]
+        return deq.reshape(c.shape)
+    return jax.tree.map(one, comp, is_leaf=lambda x: isinstance(x, Compressed))
+
+
+def wire_bytes_ratio() -> float:
+    """fp32 bytes / compressed bytes per element."""
+    return 4.0 / (1.0 + 4.0 / BLOCK)

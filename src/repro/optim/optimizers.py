@@ -1,0 +1,149 @@
+"""Optimizers with sharding-aware state (no optax dependency).
+
+AdamW: ZeRO-style — moments inherit the parameter's sharding (params are
+already FSDP+TP sharded by the rule table, so optimizer state is too);
+moments optionally bf16 (distributed-optimization memory trick).
+
+Adafactor: factored second moment (row/col statistics) for the 480B MoE —
+state is ~2/max(d_row,d_col) of AdamW's.
+
+Each optimizer exposes:
+  init(params)                 -> state tree
+  update(grads, state, params, step) -> (new_params, new_state, stats)
+  state_specs(param_specs)     -> logical-axis tree matching state
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                        for g in jax.tree.leaves(tree)))
+
+
+def _clip_by_global_norm(grads, max_norm):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+    state_specs: Callable
+
+
+def adamw(schedule, *, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          max_grad_norm=1.0, moment_dtype=jnp.float32):
+    """AdamW over fp32 master params. moment_dtype=bf16 halves state memory
+    (documented accuracy tradeoff; used at >100B scale)."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        grads, gn = _clip_by_global_norm(grads, max_grad_norm)
+        lr = schedule(step)
+        t = (step + 1).astype(jnp.float32)
+        c1 = 1 - b1 ** t
+        c2 = 1 - b2 ** t
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu32 = mu.astype(jnp.float32) * b1 + (1 - b1) * g
+            nu32 = nu.astype(jnp.float32) * b2 + (1 - b2) * g * g
+            step_ = (mu32 / c1) / (jnp.sqrt(nu32 / c2) + eps)
+            wd = weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+            newp = p.astype(jnp.float32) - lr * (step_ + wd)
+            return (newp.astype(p.dtype), mu32.astype(moment_dtype),
+                    nu32.astype(moment_dtype))
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        newp = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return newp, {"mu": mu, "nu": nu}, {"grad_norm": gn, "lr": lr}
+
+    def state_specs(param_specs, param_shapes=None):
+        return {"mu": param_specs, "nu": param_specs}
+
+    return Optimizer(init, update, state_specs)
+
+
+def adafactor(schedule, *, eps=1e-30, clip_threshold=1.0, decay=0.8,
+              max_grad_norm=1.0, min_dim_size_to_factor=128):
+    """Adafactor (Shazeer & Stern) without first moment: row/col-factored
+    second-moment statistics; memory ~ O(d_row + d_col) per matrix."""
+
+    def _factored(p):
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_size_to_factor and \
+            p.shape[-2] >= min_dim_size_to_factor
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(one, params)}
+
+    def update(grads, state, params, step):
+        grads, gn = _clip_by_global_norm(grads, max_grad_norm)
+        lr = schedule(step)
+        t = (step + 1).astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(v, g, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                upd_ = g * jax.lax.rsqrt(r)[..., None] * jax.lax.rsqrt(vc)[..., None, :]
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": beta * v["v"] + (1 - beta) * g2}
+                upd_ = g * jax.lax.rsqrt(nv["v"])
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(upd_ * upd_) + 1e-30)
+            upd_ = upd_ / jnp.maximum(1.0, rms / clip_threshold)
+            newp = p.astype(jnp.float32) - lr * upd_
+            return newp.astype(p.dtype), nv
+
+        # state leaves are {"vr","vc"} or {"v"} dicts: treat them as leaves
+        # and walk the STATE tree first so structures line up.
+        leaf = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        out = jax.tree.map(upd, state["v"], grads, params, is_leaf=leaf)
+        newp = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        nv = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return newp, {"v": nv}, {"grad_norm": gn, "lr": lr}
+
+    def state_specs(param_specs, param_shapes):
+        # factored leaves drop the last / second-to-last logical axis
+        def one(axes, p):
+            if _factored(p):
+                return {"vr": tuple(axes[:-1]),
+                        "vc": tuple(axes[:-2]) + tuple(axes[-1:])}
+            return {"v": tuple(axes)}
+        return {"v": jax.tree.map(one, param_specs, param_shapes,
+                                  is_leaf=lambda x: isinstance(x, tuple) and all(
+                                      isinstance(e, (str, type(None))) for e in x))}
+
+    return Optimizer(init, update, state_specs)
+
+
+def make_optimizer(cfg, schedule, moment_dtype=jnp.float32):
+    if cfg.optimizer == "adafactor":
+        return adafactor(schedule)
+    return adamw(schedule, moment_dtype=moment_dtype)

@@ -1,0 +1,40 @@
+"""LR schedules: cosine (llama-style) and WSD (minicpm's Warmup-Stable-Decay).
+
+All schedules are pure functions of the int32 step -> fp32 lr, safe inside
+jit (no python branching on traced values).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(step, *, peak_lr, warmup_steps, total_steps, min_ratio=0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    t = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+                 0.0, 1.0)
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def wsd(step, *, peak_lr, warmup_steps, total_steps, decay_frac=0.1,
+        min_ratio=0.01):
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395): linear warmup,
+    long stable plateau at peak, exponential-ish decay over the last
+    `decay_frac` of training."""
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    decay_start = total_steps * (1 - decay_frac)
+    t = jnp.clip((step - decay_start) / jnp.maximum(total_steps - decay_start, 1),
+                 0.0, 1.0)
+    decay = peak_lr * jnp.exp(jnp.log(min_ratio) * t)
+    lr = jnp.where(step < warmup_steps, warm,
+                   jnp.where(step < decay_start, peak_lr, decay))
+    return lr
+
+
+def make_schedule(name, **kw):
+    base = {"cosine": cosine, "wsd": wsd}[name]
+    def fn(step):
+        return base(step, **kw)
+    return fn

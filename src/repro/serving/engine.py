@@ -1,0 +1,131 @@
+"""Batched serving engine: prefill + decode with slot-based continuous
+batching (vLLM-style at the granularity JAX's static shapes allow).
+
+The engine owns a fixed decode batch of `n_slots` sequences and a KV cache
+sized (slots, window). Requests are queued; whenever a slot frees (EOS or
+max tokens), the next request is prefilled into that slot (single-sequence
+prefill, cache row swapped in) — decode steps always run the full static
+batch, masking empty slots. Under SWA the cache is a ring buffer.
+
+All compute paths are the same Model.prefill / Model.decode_step used by
+the dry-run; sampling is greedy or top-k temperature.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (P,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0      # 0 -> greedy
+    top_k: int = 40
+    out_tokens: Optional[list] = None
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, n_slots=4, window=512, mesh=None,
+                 seed=0):
+        self.cfg = cfg
+        self.model = Model(cfg, mesh=mesh)
+        self.params = params
+        self.n_slots = n_slots
+        self.window = self.model.kv_window(window)
+        self.mesh = mesh
+        self.rng = np.random.default_rng(seed)
+
+        self.cache = self.model.init_cache(n_slots, self.window)
+        self.pos = jnp.zeros((n_slots,), jnp.int32)
+        self.active: List[Optional[Request]] = [None] * n_slots
+        self.last_tok = jnp.zeros((n_slots, 1), jnp.int32)
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+
+        self._prefill1 = jax.jit(
+            lambda p, b: self.model.prefill(p, b, W=self.window))
+        self._decode = jax.jit(self.model.decode_step)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        req.out_tokens = []
+        self.queue.append(req)
+
+    def _free_slots(self):
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    def _insert_cache_row(self, slot, row_cache, row_pos):
+        def put(c, rc):
+            return c.at[:, slot].set(rc[:, 0].astype(c.dtype))
+        self.cache = jax.tree.map(put, self.cache, row_cache)
+        self.pos = self.pos.at[slot].set(row_pos)
+
+    def _admit(self):
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            P = len(req.prompt)
+            batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+            if self.cfg.family == "audio":
+                batch["frames"] = jnp.zeros(
+                    (1, self.cfg.enc_frames, self.cfg.d_model), jnp.bfloat16)
+            if self.cfg.family == "vlm":
+                batch["patches"] = jnp.zeros(
+                    (1, self.cfg.n_patches, self.cfg.d_model), jnp.bfloat16)
+            logits, cache1, pos1 = self._prefill1(self.params, batch)
+            self._insert_cache_row(slot, cache1, int(pos1[0]))
+            tok = self._sample(np.asarray(logits)[0], req)
+            req.out_tokens.append(int(tok))
+            self.active[slot] = req
+            self.last_tok = self.last_tok.at[slot, 0].set(int(tok))
+
+    def _sample(self, logits: np.ndarray, req: Request) -> int:
+        if req.temperature <= 0:
+            return int(np.argmax(logits))
+        l = logits / req.temperature
+        idx = np.argpartition(l, -req.top_k)[-req.top_k:]
+        p = np.exp(l[idx] - l[idx].max())
+        p /= p.sum()
+        return int(self.rng.choice(idx, p=p))
+
+    def _retire(self, slot):
+        req = self.active[slot]
+        self.active[slot] = None
+        self.done.append(req)
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One engine iteration: admit waiting requests, one decode step."""
+        self._admit()
+        if all(r is None for r in self.active):
+            return False
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self.last_tok, self.pos)
+        self.pos = self.pos + 1
+        logits_np = np.asarray(logits, np.float32)
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = self._sample(logits_np[slot], req)
+            req.out_tokens.append(tok)
+            self.last_tok = self.last_tok.at[slot, 0].set(tok)
+            if len(req.out_tokens) >= req.max_new_tokens:
+                self._retire(slot)
+        return True
+
+    def run(self, max_steps=10000):
+        steps = 0
+        while (self.queue or any(r is not None for r in self.active)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.done, steps

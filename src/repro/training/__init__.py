@@ -1,0 +1,1 @@
+from repro.training.loop import Trainer, TrainConfig

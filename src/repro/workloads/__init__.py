@@ -1,0 +1,1 @@
+from repro.workloads.profiler import profile_arch, profile_from_dryrun, demands_table

@@ -1,0 +1,262 @@
+"""Paper-fidelity (C1-C10) + property tests for the GCRAM compiler core."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dse, layout, power, retention, timing
+from repro.core.bank import BankConfig, build_bank, organize
+from repro.core.cells import CELLS, with_write_vt
+from repro.core.compiler import GCRAMCompiler
+from repro.core.spice import devices as dv
+from repro.core.techfile import SYN40
+
+
+# ---------------------------------------------------------------------------
+# C1: cell-area ratios (Fig 3)
+# ---------------------------------------------------------------------------
+
+def test_c1_cell_area_ratios():
+    a6 = layout.cell_area_um2(SYN40, "sram6t")
+    ann = layout.cell_area_um2(SYN40, "gc2t_nn")
+    aos = layout.cell_area_um2(SYN40, "gc2t_osos")
+    assert 0.66 <= ann / a6 <= 0.72          # paper: 69%
+    assert 0.09 <= aos / a6 <= 0.13          # paper: 11%
+    # 3T adds area over 2T
+    assert layout.cell_area_um2(SYN40, "gc3t") > ann
+
+
+# ---------------------------------------------------------------------------
+# C2/C3: bank vs array area (Fig 6)
+# ---------------------------------------------------------------------------
+
+def _ratio(bits, cell):
+    ws = int(np.sqrt(bits))
+    bs = build_bank(BankConfig(ws, ws, cell="sram6t"))
+    bg = build_bank(BankConfig(ws, ws, cell=cell))
+    return bg, bs
+
+
+def test_c2_gc_bank_larger_array_smaller():
+    for bits in (1024, 4096, 16384):
+        bg, bs = _ratio(bits, "gc2t_nn")
+        assert bg.area_um2 > bs.area_um2, bits          # dual-port periphery
+        assert bg.array_area_um2 < bs.array_area_um2    # smaller cell
+    # crossover at large sizes (paper: extrapolated beyond 256 Kb; our
+    # synthetic deck crosses between 16 Kb and 256 Kb — see EXPERIMENTS.md)
+    bg, bs = _ratio(262144, "gc2t_nn")
+    assert bg.area_um2 < bs.area_um2
+
+
+def test_c2_array_efficiency_rises_with_size():
+    effs = [_ratio(b, "gc2t_nn")[0].plan.array_efficiency
+            for b in (1024, 4096, 16384)]
+    assert effs[0] < effs[1] < effs[2]
+
+
+def test_c3_osos_bank_smaller_everywhere():
+    for bits in (1024, 4096, 16384):
+        bo, bs = _ratio(bits, "gc2t_osos")
+        assert bo.area_um2 < bs.area_um2, bits
+
+
+# ---------------------------------------------------------------------------
+# C4/C5: frequency (Fig 7a)
+# ---------------------------------------------------------------------------
+
+def test_c4_frequency_ordering():
+    for bits in (1024, 4096, 16384):
+        ws = int(np.sqrt(bits))
+        fs = timing.analyze(build_bank(BankConfig(ws, ws, "sram6t"))).f_max_hz
+        fg = timing.analyze(build_bank(BankConfig(ws, ws, "gc2t_nn"))).f_max_hz
+        assert fg < fs                       # single-ended read is slower
+        # narrow word (forces column mux) is slower than the square config
+        bn = build_bank(BankConfig(16, bits // 16, "gc2t_nn"))
+        if bn.has_colmux:
+            fn = timing.analyze(bn).f_max_hz
+            assert fn <= fg
+    # frequency decreases with bank size
+    f1 = timing.analyze(build_bank(BankConfig(32, 32, "gc2t_nn"))).f_max_hz
+    f16 = timing.analyze(build_bank(BankConfig(128, 128, "gc2t_nn"))).f_max_hz
+    assert f16 < f1
+
+
+def test_c4_delay_chain_stages_grow():
+    s1 = timing.analyze(build_bank(BankConfig(32, 32, "gc2t_nn"))).delay_stages
+    s16 = timing.analyze(build_bank(BankConfig(128, 128, "gc2t_nn"))).delay_stages
+    assert s16 > s1
+
+
+def test_c5_wwlls_speeds_up_and_costs_area():
+    b0 = build_bank(BankConfig(64, 64, "gc2t_nn"))
+    bl = build_bank(BankConfig(64, 64, "gc2t_nn", wwlls=True))
+    t0 = timing.analyze(b0)
+    tl = timing.analyze(bl)
+    assert tl.t_cell_s < t0.t_cell_s         # boosted SN -> faster read
+    assert bl.area_um2 > b0.area_um2         # extra ring + LS column
+
+
+# ---------------------------------------------------------------------------
+# C6: effective bandwidth (Fig 7b)
+# ---------------------------------------------------------------------------
+
+def test_c6_dual_port_bandwidth():
+    pg = dse.evaluate(BankConfig(64, 64, "gc2t_nn"))
+    ps = dse.evaluate(BankConfig(64, 64, "sram6t"))
+    # SRAM eff bw is halved (shared port): per-MHz GCRAM moves 2 words
+    assert pg.eff_bw_bps / pg.f_max_hz == pytest.approx(2 * 64, rel=1e-6)
+    assert ps.eff_bw_bps / ps.f_max_hz == pytest.approx(64, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# C7: leakage (Fig 7c)
+# ---------------------------------------------------------------------------
+
+def test_c7_leakage():
+    bs = build_bank(BankConfig(128, 128, "sram6t"))
+    bg = build_bank(BankConfig(128, 128, "gc2t_nn"))
+    ps = power.analyze(bs, 1e9)
+    pg = power.analyze(bg, 1e9)
+    assert pg.cell_leakage_w == 0.0                    # no VDD->GND path
+    assert ps.cell_leakage_w > 100 * max(pg.cell_leakage_w, 1e-12)
+    assert pg.leakage_w < ps.leakage_w                 # bank-level too
+
+
+# ---------------------------------------------------------------------------
+# C8/C9: retention (Fig 8)
+# ---------------------------------------------------------------------------
+
+def test_c8_si_retention_microseconds():
+    r = retention.analyze(CELLS["gc2t_nn"], SYN40)
+    assert 1e-7 < r.t_ret_s < 1e-4
+
+
+def test_c8_retention_rises_with_vt_and_wwlls():
+    rl = retention.analyze(with_write_vt(CELLS["gc2t_nn"], "nmos_lvt"), SYN40)
+    rs = retention.analyze(with_write_vt(CELLS["gc2t_nn"], "nmos_svt"), SYN40)
+    rh = retention.analyze(with_write_vt(CELLS["gc2t_nn"], "nmos_hvt"), SYN40)
+    assert rl.t_ret_s < rs.t_ret_s < rh.t_ret_s
+    rb = retention.analyze(CELLS["gc2t_nn"], SYN40, wwlls=True)
+    assert rb.t_ret_s > rs.t_ret_s
+
+
+def test_c9_os_retention():
+    r = retention.analyze(CELLS["gc2t_osos"], SYN40)
+    assert 1e-3 < r.t_ret_s < 1.0                      # ms range
+    rh = retention.analyze(with_write_vt(CELLS["gc2t_osos"], "os_n_hvt"),
+                           SYN40, wwlls=True)
+    assert rh.t_ret_s > 10.0                           # paper: >10 s
+    # hybrid sits between Si and OS
+    rhyb = retention.analyze(CELLS["gc2t_hyb"], SYN40)
+    rsi = retention.analyze(CELLS["gc2t_nn"], SYN40)
+    assert rsi.t_ret_s < rhyb.t_ret_s
+
+
+def test_os_ioff_below_1e18_claim():
+    fl = SYN40.flavor("os_n_hvt")
+    assert dv.i_off(fl, 1.0, 0.04, 1.1) < 1e-18        # A/um
+
+
+# ---------------------------------------------------------------------------
+# GEMTOO-gap: analytic vs transient <= 15%
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_analytic_vs_transient_within_15pct():
+    for cell in ("gc2t_nn", "gc2t_np"):
+        rep = GCRAMCompiler(BankConfig(32, 32, cell=cell)).compile(
+            simulate=True)
+        s = rep.summary()
+        assert s["analytic_vs_sim_dev"] <= 0.15, (cell, s["analytic_vs_sim_dev"])
+
+
+# ---------------------------------------------------------------------------
+# properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([16, 32, 64, 128]), st.sampled_from([16, 32, 64, 128]),
+       st.sampled_from(["gc2t_nn", "gc2t_np", "gc2t_osos", "sram6t"]))
+def test_prop_bank_area_positive_monotone(ws, nw, cell):
+    b = build_bank(BankConfig(ws, nw, cell))
+    assert b.area_um2 > b.array_area_um2 > 0
+    # monotone at 4x capacity (2x can legitimately invert on aspect-ratio
+    # flips of small banks — hypothesis found (16,32)->(16,64))
+    b2 = build_bank(BankConfig(ws, nw * 4, cell))
+    assert b2.area_um2 > b.area_um2
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.30, 0.65), st.floats(0.08, 0.3))
+def test_prop_retention_monotone_in_vt_and_width(vt, w):
+    import dataclasses
+    c1 = dataclasses.replace(CELLS["gc2t_nn"], w_write=w)
+    fn = retention.leak_fn(c1, SYN40)
+    import jax.numpy as jnp
+    i_lo = float(fn(jnp.float32(0.6), vt0=vt))
+    i_hi = float(fn(jnp.float32(0.6), vt0=vt + 0.05))
+    assert i_hi < i_lo                      # higher VT -> less leak
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(16, 256), st.integers(16, 256))
+def test_prop_organize_squares_the_array(ws, nw):
+    wpr = organize(ws, nw)
+    assert nw % wpr == 0
+    rows, cols = nw // wpr, ws * wpr
+    base = max(nw, ws) / min(nw, ws)
+    assert max(rows, cols) / min(rows, cols) <= base + 1e-9
+
+
+def test_device_model_consistency():
+    """mna.channel_current_raw must equal devices.channel_current."""
+    import jax.numpy as jnp
+    from repro.core.spice.mna import channel_current_raw
+    fl = SYN40.flavor("nmos_svt")
+    for vg, va, vb in [(1.1, 1.1, 0.0), (0.0, 1.1, 0.0), (0.7, 0.2, 0.9)]:
+        a = float(dv.channel_current(fl, 0.2, 0.05, vg, va, vb))
+        b = float(channel_current_raw(1.0, fl.vt0, fl.n_slope, fl.k_prime,
+                                      fl.lambda_, 0.2, 0.05, vg, va, vb))
+        assert a == pytest.approx(b, rel=1e-6)
+
+
+def test_gradient_cooptimization_meets_target():
+    res = dse.grad_optimize(target_ret_s=1e-4, steps=150)
+    assert res["met"], res
+    res2 = dse.grad_optimize(target_ret_s=1e-6, steps=150)
+    assert res2["met"], res2
+    # harder target should require higher VT or bigger boost or both
+    assert (res["write_vt"] >= res2["write_vt"] - 0.05)
+
+
+def test_compiler_outputs(tmp_path):
+    rep = GCRAMCompiler(BankConfig(32, 32, cell="gc2t_nn")).compile()
+    out = rep.write(str(tmp_path / "gc32"))
+    import os, json
+    assert os.path.exists(os.path.join(out, "report.json"))
+    assert os.path.exists(os.path.join(out, "floorplan.json"))
+    assert os.path.exists(os.path.join(out, "read_column.sp"))
+    txt = open(os.path.join(out, "read_column.sp")).read()
+    assert txt.startswith("*") and ".end" in txt
+    man = json.load(open(os.path.join(out, "floorplan.json")))
+    assert man["array_efficiency"] < 1.0
+
+
+# ---------------------------------------------------------------------------
+# multibank macros (paper §VI realized)
+# ---------------------------------------------------------------------------
+
+def test_multibank_scaling():
+    from repro.core.multibank import build_multibank, banks_needed
+    from repro.core.dse import Demand, evaluate
+    cfg = BankConfig(32, 32, "gc2t_nn")
+    m1 = build_multibank(cfg, 1)
+    m8 = build_multibank(cfg, 8)
+    assert m8.capacity_bits == 8 * m1.capacity_bits
+    assert m8.eff_bw_bps == pytest.approx(8 * m1.eff_bw_bps, rel=1e-6)
+    assert m8.area_um2 == pytest.approx(8 * m1.area_um2, rel=1e-6)
+    assert m8.f_max_hz < evaluate(cfg).f_max_hz        # crossbar hop
+    # an L2-class demand that a single bank cannot serve becomes feasible
+    dp = evaluate(cfg)
+    d = Demand("l2", "L2", dp.f_max_hz * 5.5, 1e-7)
+    n = banks_needed(dp, d)
+    assert n == 6

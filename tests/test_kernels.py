@@ -1,0 +1,119 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.batched_solve import ops as solve_ops
+from repro.kernels.batched_solve.ref import batched_solve_ref
+from repro.kernels.gc_array_step import ops as array_ops
+from repro.kernels.gc_array_step.ref import gc_array_step_ref
+
+
+def _dd_system(rng, B, N, dtype):
+    A = rng.standard_normal((B, N, N)).astype(dtype) * 0.1
+    A += np.eye(N, dtype=dtype)[None] * (np.abs(A).sum(-1).max() + 1.0)
+    r = rng.standard_normal((B, N)).astype(dtype)
+    return jnp.asarray(A), jnp.asarray(r)
+
+
+@pytest.mark.parametrize("B,N", [(1, 4), (4, 8), (8, 33), (3, 64),
+                                 (16, 130), (2, 17)])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_batched_solve_sweep(B, N, dtype):
+    rng = np.random.default_rng(B * 100 + N)
+    A, r = _dd_system(rng, B, N, dtype)
+    x = solve_ops.batched_solve(A, r)
+    xr = batched_solve_ref(A, r)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(xr),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_batched_solve_block_sizes():
+    rng = np.random.default_rng(0)
+    A, r = _dd_system(rng, 7, 24, np.float32)
+    for bb in (1, 2, 8):
+        x = solve_ops.batched_solve(A, r, block_b=bb)
+        np.testing.assert_allclose(np.asarray(x),
+                                   np.asarray(batched_solve_ref(A, r)),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_batched_solve_under_vmap():
+    rng = np.random.default_rng(1)
+    A, r = _dd_system(rng, 5, 16, np.float32)
+    xs = jax.vmap(lambda rr: solve_ops.solve1(A[0], rr))(r)
+    xr = batched_solve_ref(jnp.broadcast_to(A[0], (5, 16, 16)), r)
+    np.testing.assert_allclose(np.asarray(xs), np.asarray(xr),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("R,C,bc", [(16, 16, 16), (32, 48, 16),
+                                    (64, 130, 64), (8, 8, 128)])
+def test_gc_array_step_sweep(R, C, bc):
+    rng = np.random.default_rng(R + C)
+    p = array_ops.cell_params("gc2t_nn")
+    v_sn = jnp.asarray(rng.uniform(0, 0.9, (R, C)), jnp.float32)
+    v_bl = jnp.asarray(rng.uniform(0, 1.1, (C,)), jnp.float32)
+    wwl = jnp.zeros((R,)).at[R // 2].set(1.1)
+    wbl = jnp.asarray(rng.uniform(0, 1.1, (C,)), jnp.float32)
+    rwl = jnp.full((R,), 1.1)
+    sn_k, bl_k = array_ops.gc_array_step(v_sn, v_bl, wwl, wbl, rwl, 2e-11,
+                                         p, block_c=bc)
+    sn_r, bl_r = gc_array_step_ref(v_sn, v_bl, wwl, wbl, rwl, 2e-11, p)
+    # fp32 param-rounding noise only (volts)
+    np.testing.assert_allclose(np.asarray(sn_k), np.asarray(sn_r), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(bl_k), np.asarray(bl_r), atol=1e-3)
+
+
+def test_gc_array_write_physics():
+    """200 steps of a selected-row write: SN approaches VDD-VT; unselected
+    rows stay parked."""
+    p = array_ops.cell_params("gc2t_nn")
+    v_sn = jnp.zeros((16, 16))
+    v_bl = jnp.full((16,), 1.1)
+    wwl = jnp.zeros((16,)).at[3].set(1.1)
+    wbl = jnp.full((16,), 1.1)
+    rwl = jnp.full((16,), 1.1)
+    for _ in range(200):
+        v_sn, v_bl = array_ops.gc_array_step(v_sn, v_bl, wwl, wbl, rwl,
+                                             1e-11, p, block_c=16)
+    assert 0.6 < float(v_sn[3, 0]) < 1.0
+    assert float(jnp.max(jnp.abs(v_sn[5]))) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# flash-attention kernel (§Perf hillclimb #1)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@pytest.mark.parametrize("B,Sq,Skv,H,K,hd,causal,off", [
+    (2, 64, 64, 4, 2, 16, True, 0),
+    (1, 128, 128, 8, 8, 32, True, 0),
+    (2, 32, 128, 4, 1, 16, True, 96),    # seq-parallel shard slice
+    (1, 96, 128, 2, 2, 16, True, 0),     # non-divisible q
+    (1, 128, 128, 4, 2, 64, False, 0),
+])
+def test_flash_kernel_sweep(B, Sq, Skv, H, K, hd, causal, off):
+    rng = np.random.default_rng(Sq + Skv)
+    q = jnp.asarray(rng.standard_normal((B, Sq, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Skv, K, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Skv, K, hd)), jnp.float32)
+    o = fa_ops.flash_attention(q, k, v, off, bq=32, bkv=32, causal=causal)
+    r = attention_ref(q, k, v, causal=causal, q_offset=off)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5)
+
+
+def test_flash_kernel_bf16():
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.standard_normal((1, 64, 4, 32)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 64, 2, 32)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 64, 2, 32)), jnp.bfloat16)
+    o = fa_ops.flash_attention(q, k, v, bq=32, bkv=32)
+    r = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=3e-2)

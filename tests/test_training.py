@@ -1,0 +1,181 @@
+"""Training-substrate integration tests: loss decreases, checkpoint
+restart is bit-identical, preemption is graceful, elastic restore
+re-shards, data pipeline is a pure function of the cursor."""
+import dataclasses
+import glob
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, ShapeConfig
+from repro.checkpoint import CheckpointManager, save_checkpoint, \
+    restore_checkpoint, latest_step
+from repro.data import SyntheticLMData
+from repro.training import Trainer, TrainConfig
+
+SHAPE = ShapeConfig("tiny_train", 64, 4, "train")
+
+
+def _tiny_cfg():
+    return dataclasses.replace(get_config("llama3.2-1b").reduced(),
+                               name="tiny", n_layers=2, dtype="float32")
+
+
+def _mesh():
+    import jax
+    n = len(jax.devices())
+    from repro.launch.mesh import make_test_mesh
+    return make_test_mesh(data=1, model=1) if n == 1 else \
+        make_test_mesh(data=1, model=min(2, n))
+
+
+def test_loss_decreases(tmp_path):
+    tr = Trainer(_tiny_cfg(), _mesh(), SHAPE,
+                 TrainConfig(total_steps=30, ckpt_every=100,
+                             ckpt_dir=str(tmp_path), log_every=100,
+                             log_fn=lambda *a: None))
+    _, hist = tr.run()
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first - 0.1, (first, last)
+
+
+def test_checkpoint_restart_bit_identical(tmp_path):
+    mk = lambda d: Trainer(_tiny_cfg(), _mesh(), SHAPE,
+                           TrainConfig(total_steps=12, ckpt_every=6,
+                                       ckpt_dir=str(d), log_every=100,
+                                       log_fn=lambda *a: None))
+    # uninterrupted run
+    st_a, hist_a = mk(tmp_path / "a").run()
+    # interrupted at step 7 (after the step-6 checkpoint), then resumed
+    tr_b = mk(tmp_path / "b")
+    tr_b.tcfg.preempt_at = 7
+    tr_b.run()
+    tr_b2 = mk(tmp_path / "b")
+    st_b, hist_b = tr_b2.run()
+    assert tr_b2.stats["restored_step"] in (6, 7)
+    for la, lb in zip(jax.tree.leaves(st_a["params"]),
+                      jax.tree.leaves(st_b["params"])):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    # training curves align on the overlapping tail
+    tail_a = {h["step"]: h["loss"] for h in hist_a}
+    tail_b = {h["step"]: h["loss"] for h in hist_b}
+    for s in tail_b:
+        assert tail_a[s] == pytest.approx(tail_b[s], rel=1e-6)
+
+
+def test_data_pipeline_pure_and_sharded():
+    ds = SyntheticLMData(vocab_size=100, seq_len=16, global_batch=8,
+                         n_shards=2, shard=1)
+    a = ds.batch_at(5)
+    b = ds.batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # different shards / steps differ
+    ds0 = dataclasses.replace(ds, shard=0)
+    assert not np.array_equal(ds0.batch_at(5)["tokens"], a["tokens"])
+    assert not np.array_equal(ds.batch_at(6)["tokens"], a["tokens"])
+    assert a["tokens"].shape == (4, 16)
+    # labels are next-token of the same stream
+    assert a["labels"].shape == (4, 16)
+
+
+def test_checkpoint_atomicity_and_gc(tmp_path):
+    tree = {"w": jnp.arange(10.0), "b": {"x": jnp.ones((3, 3))}}
+    cm = CheckpointManager(str(tmp_path), keep_last=2)
+    for s in (1, 2, 3):
+        cm.save(s, tree)
+    steps = sorted(int(p.split("_")[-1]) for p in
+                   glob.glob(str(tmp_path / "step_*")))
+    assert steps == [2, 3]                      # retention
+    assert latest_step(str(tmp_path)) == 3
+    # a partial (uncommitted) dir is invisible
+    os.makedirs(tmp_path / "step_000000009")
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_elastic_restore_new_sharding(tmp_path):
+    """Save unsharded, restore onto a 2-device sharded layout."""
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices")
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = _mesh()
+    tree = {"w": jnp.arange(16.0).reshape(8, 2)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    sh = {"w": NamedSharding(mesh, P("model", None))}
+    like = {"w": jax.ShapeDtypeStruct((8, 2), jnp.float32)}
+    out = restore_checkpoint(str(tmp_path), 1, like, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree["w"]))
+    assert out["w"].sharding == sh["w"]
+
+
+def test_async_checkpoint(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.ones((64, 64))}
+    cm.save_async(5, tree)
+    cm.wait()
+    assert latest_step(str(tmp_path)) == 5
+    _, out = cm.restore_latest({"w": jax.ShapeDtypeStruct((64, 64),
+                                                          jnp.float32)})
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.ones((64, 64)))
+
+
+def test_nan_guard_skips_update():
+    """A poisoned batch must not corrupt the state (in-step guard)."""
+    from repro.launch import steps as steps_mod
+    cfg = _tiny_cfg()
+    mesh = _mesh()
+    bundle = steps_mod.build(cfg, mesh, SHAPE)
+    fn = bundle.jitted()
+    tr = Trainer(cfg, mesh, SHAPE, TrainConfig(total_steps=1,
+                                               log_fn=lambda *a: None))
+    state = tr.init_state()
+    w_before = np.asarray(jax.tree.leaves(state["params"])[0]).copy()
+    bad = {"tokens": np.zeros((4, 64), np.int32),
+           "labels": np.zeros((4, 64), np.int32)}
+    # poison by scaling params: make loss inf via huge logits? simpler:
+    # corrupt one param to inf so grads are non-finite
+    leaves, treedef = jax.tree.flatten(state["params"])
+    leaves[0] = leaves[0].at[0].set(jnp.inf)
+    state["params"] = jax.tree.unflatten(treedef, leaves)
+    w_inf = np.asarray(jax.tree.leaves(state["params"])[0]).copy()
+    with mesh:
+        new_state, metrics = fn(state, bad)
+    assert not np.isfinite(metrics["loss"])
+    w_after = np.asarray(jax.tree.leaves(new_state["params"])[0])
+    np.testing.assert_array_equal(w_after, w_inf)   # unchanged (no-op)
+
+
+def test_gradient_compression_error_feedback():
+    """int8+EF compression: biased per step, unbiased in accumulation —
+    the summed (grad_hat + carried error) telescopes to the true sum."""
+    from repro.optim.compression import (compress_grads, decompress_grads,
+                                         wire_bytes_ratio)
+    rng = np.random.default_rng(0)
+    tree = {"a": jnp.asarray(rng.standard_normal((130, 7)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((2050,)), jnp.float32)}
+    comp, err = compress_grads(tree)
+    deq = decompress_grads(comp)
+    # single-shot relative error bounded by int8 resolution
+    for k in tree:
+        rel = float(jnp.max(jnp.abs(deq[k] - tree[k])) /
+                    jnp.max(jnp.abs(tree[k])))
+        assert rel < 0.02, (k, rel)
+    # error feedback telescopes: sum of dequantized over steps -> sum of true
+    total_true = jax.tree.map(jnp.zeros_like, tree)
+    total_hat = jax.tree.map(jnp.zeros_like, tree)
+    err = None
+    for step in range(20):
+        g = jax.tree.map(
+            lambda x: x * (1.0 + 0.1 * step), tree)
+        comp, err = compress_grads(g, err)
+        deq = decompress_grads(comp)
+        total_true = jax.tree.map(jnp.add, total_true, g)
+        total_hat = jax.tree.map(jnp.add, total_hat, deq)
+    for k in tree:
+        resid = float(jnp.max(jnp.abs(total_hat[k] + err[k] - total_true[k])))
+        assert resid < 1e-3, (k, resid)
+    assert wire_bytes_ratio() > 3.9
