@@ -1,0 +1,92 @@
+"""Micro-benchmark: batched (vmapped) lattice sweep vs the per-point
+Python loop, with parity checks against the scalar reference.
+
+    PYTHONPATH=src python benchmarks/bench_sweep.py [--repeats 2]
+
+Writes results/benchmarks/bench_sweep.json. Each path is run `repeats+1`
+times and the best post-warmup wall time is reported, so the number
+measures steady-state evaluation (JAX op compilation amortizes across a
+session; the cold-start cost is reported separately as *_cold_s).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+_FIELDS = ("area_um2", "f_max_hz", "read_bw_bps", "write_bw_bps",
+           "eff_bw_bps", "leakage_w", "refresh_w", "retention_s",
+           "t_read_s", "t_write_s")
+
+
+def _max_rel_dev(batch, ref):
+    worst = 0.0
+    for p, r in zip(batch, ref):
+        if p.swing_ok != r.swing_ok:
+            return float("inf")
+        for f in _FIELDS:
+            a, b = getattr(p, f), getattr(r, f)
+            if np.isinf(b) or np.isinf(a):
+                if a != b:
+                    return float("inf")
+                continue
+            worst = max(worst, abs(a - b) / max(abs(b), 1e-30))
+    return worst
+
+
+def collect(repeats: int = 2) -> dict:
+    from repro.api import Session
+    from repro.api.queries import SweepQuery
+    from repro.core import dse
+    from repro.core.dse_batch import evaluate_batch
+
+    cfgs = SweepQuery().configs(Session().tech)
+
+    def best_of(fn):
+        cold = None
+        walls = []
+        for _ in range(repeats + 1):
+            t0 = time.time()
+            res = fn()
+            walls.append(time.time() - t0)
+            cold = cold if cold is not None else walls[0]
+        return res, min(walls[1:]) if len(walls) > 1 else walls[0], cold
+
+    batch, batch_s, batch_cold = best_of(lambda: evaluate_batch(cfgs))
+    ref, loop_s, loop_cold = best_of(
+        lambda: [dse.evaluate(c) for c in cfgs])
+    dev = _max_rel_dev(batch, ref)
+    speedup = loop_s / max(batch_s, 1e-9)
+    return {
+        "n_points": len(cfgs),
+        "loop_wall_s": round(loop_s, 3),
+        "batched_wall_s": round(batch_s, 3),
+        "loop_cold_s": round(loop_cold, 3),
+        "batched_cold_s": round(batch_cold, 3),
+        "speedup": round(speedup, 1),
+        "max_rel_dev": float(f"{dev:.3g}"),
+        "checks": {"speedup_ge_3x": speedup >= 3.0,
+                   "parity_within_1e-6": dev <= 1e-6},
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--out", default="results/benchmarks")
+    args = ap.parse_args()
+    res = collect(args.repeats)
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out, "bench_sweep.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    print(f"bench_sweep: {res['n_points']} points  "
+          f"loop {res['loop_wall_s']}s  batched {res['batched_wall_s']}s  "
+          f"speedup {res['speedup']}x  max_rel_dev {res['max_rel_dev']}")
+    return 0 if all(res["checks"].values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

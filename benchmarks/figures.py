@@ -317,6 +317,13 @@ def beyond_batched_spice_throughput():
             "checks": {"batching_pays": speedup > 4}}
 
 
+def beyond_batched_sweep():
+    """Unified-API lattice sweep: batched (vmapped) vs per-point loop,
+    parity + wall-clock (see benchmarks/bench_sweep.py)."""
+    from benchmarks.bench_sweep import collect
+    return collect(repeats=1)
+
+
 ALL = {
     "fig3_cell_area": fig3_cell_area,
     "fig6_bank_area": fig6_bank_area,
@@ -328,4 +335,5 @@ ALL = {
     "fig10_shmoo": fig10_shmoo,
     "beyond_dse_gradopt": beyond_dse_gradopt,
     "beyond_batched_spice_throughput": beyond_batched_spice_throughput,
+    "beyond_batched_sweep": beyond_batched_sweep,
 }

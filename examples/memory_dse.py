@@ -1,15 +1,16 @@
 """The paper's signature scenario end-to-end: profile an AI workload,
-explore the GCRAM design space, pick memory configs per buffer class.
+explore the GCRAM design space, pick memory configs per buffer class —
+all through the unified `repro.api` query surface.
 
     PYTHONPATH=src python examples/memory_dse.py --arch llama3.2-1b --shape decode_32k
 
 1. profile_arch()      - GainSight-analogue demands for (arch, shape)
-2. dse.sweep()         - evaluate the GCRAM config lattice
-3. dse.shmoo()         - feasibility against the demands (Fig 10 row)
+2. SweepQuery          - batched (vmapped) evaluation of the GCRAM lattice
+3. MatchQuery          - feasibility shmoo + multibank sizing (Fig 10 row)
 4. plan_memory()       - densest feasible bank per buffer class
-5. grad_optimize()     - continuous co-optimization for the activation
+5. OptimizeQuery       - continuous co-optimization for the activation
                          cache's exact lifetime target (paper §VI)
-6. GCRAMCompiler       - compile the chosen bank: netlists + floorplan
+6. Session.compile()   - compile the chosen bank: netlists + floorplan
 """
 import argparse
 import json
@@ -17,9 +18,8 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import dse
+from repro.api import MatchQuery, OptimizeQuery, Session, SweepQuery
 from repro.core.bank import BankConfig
-from repro.core.compiler import GCRAMCompiler
 from repro.workloads.profiler import plan_memory, profile_arch
 
 
@@ -30,6 +30,8 @@ def main():
     ap.add_argument("--out", default="/tmp/repro_memory_dse")
     args = ap.parse_args()
 
+    session = Session()
+
     print(f"== 1. profiling {args.arch}:{args.shape} ==")
     prof = profile_arch(args.arch, args.shape)
     print(f"  step={prof.step_time_s:.3e}s  "
@@ -38,15 +40,19 @@ def main():
           f"L2 demand {prof.l2_read_hz/1e6:.0f} MHz/bank "
           f"(kv lifetime {prof.kv_lifetime_s:.2e}s)")
 
-    print("== 2/3. sweeping the GCRAM lattice ==")
-    points = dse.sweep()
-    feas_any = [p for d in prof.demands() for p in points
-                if dse.feasible(p, d)]
-    print(f"  {len(points)} design points; {len(feas_any)} (point, demand) "
-          f"feasible pairings")
+    print("== 2/3. sweeping the GCRAM lattice + matching demands ==")
+    table = session.run(SweepQuery())
+    match = session.run(MatchQuery(demands=tuple(prof.demands())))
+    print(f"  {len(table)} design points; shmoo pass rate "
+          f"{match.pass_rate:.0%}")
+    for row in match.rows:
+        macro = f"{row['banks_needed']} bank(s) in an interleaved macro" \
+            if row["macro_feasible"] else "infeasible even multibanked"
+        print(f"  {row['demand']:24s}: {row['n_feasible']} feasible banks, "
+              f"{macro}")
 
     print("== 4. memory plan per buffer class ==")
-    plan = plan_memory(prof, points)
+    plan = plan_memory(prof, table.points)
     for cls, choice in plan.items():
         if choice["feasible"]:
             print(f"  {cls:17s}: {choice['cell']} "
@@ -61,11 +67,11 @@ def main():
                   f"lifetime {choice['lifetime_s']:.1e}s) -> multi-bank")
 
     print("== 5. gradient co-optimization for the activation cache ==")
-    res = dse.grad_optimize(target_ret_s=max(prof.act_lifetime_s, 1e-6),
-                            steps=200)
+    res = session.run(OptimizeQuery(
+        target_ret_s=max(prof.act_lifetime_s, 1e-6), steps=200))
     print(f"  VT={res['write_vt']:.3f}V W={res['w_write_um']:.3f}um "
           f"boost={res['wwl_boost']:.2f}V -> retention "
-          f"{res['retention_s']:.2e}s (target met: {res['met']})")
+          f"{res['retention_s']:.2e}s (target met: {res.met})")
 
     print("== 6. compiling the activation-cache bank ==")
     act = plan.get("activation_cache", {})
@@ -73,9 +79,9 @@ def main():
                      num_words=act.get("num_words", 32),
                      cell=act.get("cell", "gc2t_nn"),
                      wwlls=bool(act.get("wwlls", False)))
-    rep = GCRAMCompiler(cfg).compile(simulate=True)
+    rep = session.compile(cfg, simulate=True)
     out = rep.write(args.out)
-    s = rep.summary()
+    s = rep.as_dict()
     print(f"  wrote {out}: f={s['timing']['f_max_hz']/1e6:.0f}MHz "
           f"analytic-vs-sim dev={s['analytic_vs_sim_dev']:.1%} "
           f"bank={s['bank']['bank_area_um2']:.0f}um2")

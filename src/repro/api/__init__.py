@@ -1,0 +1,35 @@
+"""Unified OpenGCRAM query API — ONE user-facing entry point.
+
+The paper pitches a *compiler*: a config goes in, circuits and
+area/delay/power reports come out, and a DSE layer matches banks to
+workload demands (§III, Fig 10). This package is that surface:
+
+    from repro.api import Session, CompileQuery, SweepQuery, MatchQuery
+
+    s = Session()                          # tech + caches
+    rep = s.run(CompileQuery(BankConfig(32, 32, cell="gc2t_nn")))
+    table = s.run(SweepQuery())            # batched (vmapped) lattice
+    match = s.run(MatchQuery(demands=tuple(profile.demands())))
+    best = table.pareto().best("eff_bw_bps")
+
+Queries are declarative dataclasses; every result shares the `Result`
+interface (`.as_dict()` / `.write(outdir)`). A `Session` memoizes
+per-config evaluations and whole sweep tables, and `SweepQuery` runs
+through the struct-of-arrays `jax.vmap` evaluator in
+`repro.core.dse_batch` (scalar reference: `repro.core.dse.evaluate`).
+
+The legacy entry points (`GCRAMCompiler`, `dse.sweep`,
+`multibank.build_multibank`) remain as thin deprecated shims over this
+API.
+"""
+from repro.api.queries import (CompileQuery, MatchQuery, OptimizeQuery,
+                               Query, SweepQuery)
+from repro.api.results import (CompileResult, DesignTable, MatchResult,
+                               OptimizeResult, Result)
+from repro.api.session import Session
+
+__all__ = [
+    "Session", "Query", "CompileQuery", "SweepQuery", "MatchQuery",
+    "OptimizeQuery", "Result", "CompileResult", "DesignTable",
+    "MatchResult", "OptimizeResult",
+]

@@ -1,0 +1,82 @@
+"""Declarative query objects accepted by `repro.api.Session.run`.
+
+Each query is a frozen dataclass (hashable where possible, so sessions
+can memoize whole results) with a `run(session)` hook dispatching to the
+session method that implements it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+from repro.core.bank import BankConfig
+from repro.core.dse import Demand, lattice_configs
+
+
+@dataclass(frozen=True)
+class Query:
+    """Base class; subclasses implement run(session) -> Result."""
+
+    def run(self, session):
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class CompileQuery(Query):
+    """One bank config -> full compiler report (netlists, floorplan,
+    timing/power/retention; optionally transient-simulated)."""
+    cfg: BankConfig = BankConfig()
+    simulate: bool = False
+    solver: str = "jnp"
+
+    def run(self, session):
+        return session.compile(self.cfg, simulate=self.simulate,
+                               solver=self.solver)
+
+
+@dataclass(frozen=True)
+class SweepQuery(Query):
+    """Config lattice -> DesignTable, evaluated by the batched (vmapped)
+    struct-of-arrays evaluator (set batched=False for the scalar loop)."""
+    cells: Tuple[str, ...] = ("gc2t_nn", "gc2t_np", "gc2t_osos")
+    word_sizes: Tuple[int, ...] = (16, 32, 64, 128)
+    num_words: Tuple[int, ...] = (16, 32, 64, 128)
+    write_vts: Tuple[Optional[str], ...] = (None,)
+    wwlls: Tuple[bool, ...] = (False, True)
+    batched: bool = True
+
+    def configs(self, tech):
+        return lattice_configs(self.cells, self.word_sizes, self.num_words,
+                               self.write_vts, self.wwlls, tech=tech)
+
+    def run(self, session):
+        return session.sweep(self)
+
+
+@dataclass(frozen=True)
+class MatchQuery(Query):
+    """Lattice x workload demands -> shmoo grid + feasibility + multibank
+    sizing (`banks_needed`) per demand (the Fig 10 flow)."""
+    demands: Tuple[Demand, ...] = ()
+    sweep: SweepQuery = field(default_factory=SweepQuery)
+    allow_refresh: bool = True
+    max_banks: int = 1024
+
+    def run(self, session):
+        return session.match(self.demands, self.sweep,
+                             allow_refresh=self.allow_refresh,
+                             max_banks=self.max_banks)
+
+
+@dataclass(frozen=True)
+class OptimizeQuery(Query):
+    """Continuous co-optimization of (write VT, write width, WWL boost)
+    for a retention target — wraps dse.grad_optimize."""
+    cell: str = "gc2t_nn"
+    target_ret_s: float = 1e-4
+    target_freq_hz: Optional[float] = None
+    steps: int = 300
+    lr: float = 0.02
+
+    def run(self, session):
+        return session.optimize(self)

@@ -1,0 +1,111 @@
+"""Uniform Result hierarchy returned by Session queries.
+
+Every result exposes `.as_dict()` (JSON-ready) and `.write(outdir)`
+(writes `<outdir>/<filename>`; CompileResult additionally emits its
+netlists + floorplan, inherited from the compiler Report).
+"""
+from __future__ import annotations
+
+import abc
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core import dse
+from repro.core.compiler import Report
+from repro.core.dse import Demand, DesignPoint
+
+
+class Result(abc.ABC):
+    filename = "result.json"
+
+    @abc.abstractmethod
+    def as_dict(self) -> dict:
+        ...
+
+    def write(self, outdir: str) -> str:
+        os.makedirs(outdir, exist_ok=True)
+        with open(os.path.join(outdir, self.filename), "w") as f:
+            json.dump(self.as_dict(), f, indent=1, default=str)
+        return outdir
+
+
+# the compiler Report already implements as_dict()/write(); register it
+# so `isinstance(x, Result)` holds across the whole hierarchy
+Result.register(Report)
+CompileResult = Report
+
+
+@dataclass
+class DesignTable(Result):
+    """Evaluated design lattice: a list of DesignPoints + query context."""
+    points: List[DesignPoint]
+    query: object = None
+    filename = "design_table.json"
+
+    def __len__(self):
+        return len(self.points)
+
+    def __iter__(self):
+        return iter(self.points)
+
+    def __getitem__(self, i):
+        return self.points[i]
+
+    def pareto(self, keys=("area_um2", "f_max_hz", "standby_w")):
+        return DesignTable(dse.pareto(self.points, keys=keys), self.query)
+
+    def feasible(self, demand: Demand, *, allow_refresh=True):
+        return DesignTable(
+            [p for p in self.points
+             if dse.feasible(p, demand, allow_refresh=allow_refresh)],
+            self.query)
+
+    def best(self, key: str = "eff_bw_bps", *, minimize=False
+             ) -> Optional[DesignPoint]:
+        ok = [p for p in self.points if p.swing_ok]
+        if not ok:
+            return None
+        return (min if minimize else max)(ok, key=lambda p: getattr(p, key))
+
+    def as_dict(self):
+        return {"n_points": len(self.points),
+                "rows": [p.as_dict() for p in self.points]}
+
+
+@dataclass
+class MatchResult(Result):
+    """Shmoo of the lattice against workload demands + multibank sizing."""
+    grid: Dict[str, Dict[str, bool]]
+    rows: List[dict]                      # one summary row per demand
+    banks_needed: Dict[str, int]
+    table: DesignTable
+    filename = "match.json"
+
+    @property
+    def pass_rate(self) -> float:
+        cells = [v for row in self.grid.values() for v in row.values()]
+        return sum(cells) / len(cells) if cells else 0.0
+
+    def as_dict(self):
+        return {"demands": self.rows, "banks_needed": self.banks_needed,
+                "pass_rate": self.pass_rate, "grid": self.grid}
+
+
+@dataclass
+class OptimizeResult(Result):
+    """grad_optimize outcome (optimized design + discrete validation)."""
+    raw: dict
+    query: object = None
+    filename = "optimize.json"
+
+    def __getitem__(self, k):
+        return self.raw[k]
+
+    @property
+    def met(self) -> bool:
+        return bool(self.raw.get("met"))
+
+    def as_dict(self):
+        return dict(self.raw)

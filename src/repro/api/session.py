@@ -1,0 +1,145 @@
+"""Session: the stateful entry point of the unified query API.
+
+A Session binds a TechFile and memoizes work across queries:
+
+  * per-config DesignPoints (shared between sweeps, matches and
+    multibank sizing — a MatchQuery after a SweepQuery re-evaluates
+    nothing);
+  * whole DesignTables keyed by the (hashable, frozen) SweepQuery;
+  * compiled Reports keyed by (config, simulate, solver).
+
+Convenience methods (`compile/sweep/match/optimize/evaluate/multibank`)
+mirror the Query objects, so both styles work:
+
+    Session().run(SweepQuery(cells=("gc2t_nn",)))
+    Session().sweep(SweepQuery(cells=("gc2t_nn",)))
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional
+
+from repro.api.queries import (CompileQuery, MatchQuery, OptimizeQuery,
+                               Query, SweepQuery)
+from repro.api.results import (CompileResult, DesignTable, MatchResult,
+                               OptimizeResult, Result)
+from repro.core import compiler as compiler_mod
+from repro.core import dse
+from repro.core import multibank as mb_mod
+from repro.core.bank import BankConfig
+from repro.core.dse import Demand, DesignPoint
+from repro.core.dse_batch import evaluate_batch
+from repro.core.techfile import SYN40, TechFile
+
+
+class Session:
+    def __init__(self, tech: TechFile = SYN40):
+        self.tech = tech
+        self._points: Dict[tuple, DesignPoint] = {}
+        self._tables: Dict[SweepQuery, DesignTable] = {}
+        self._reports: Dict[tuple, CompileResult] = {}
+
+    # ------------------------------------------------------------------
+    def run(self, query: Query) -> Result:
+        """Execute any Query; returns its Result."""
+        return query.run(self)
+
+    # ------------------------------------------------------------------
+    def _adopt(self, cfg: BankConfig) -> BankConfig:
+        """Configs evaluated through a session use the session's tech."""
+        if cfg.tech is not self.tech:
+            cfg = dataclasses.replace(cfg, tech=self.tech)
+        return cfg
+
+    @staticmethod
+    def _key(cfg: BankConfig) -> tuple:
+        return (cfg.word_size, cfg.num_words, cfg.cell, cfg.write_vt,
+                cfg.wwlls, cfg.wwl_boost)
+
+    # ------------------------------------------------------------------
+    def compile(self, cfg: Optional[BankConfig] = None, *, simulate=False,
+                solver="jnp", **cfg_kw) -> CompileResult:
+        """One bank -> Report (netlists + floorplan + all reports).
+        Accepts a BankConfig or BankConfig kwargs."""
+        cfg = self._adopt(cfg if cfg is not None
+                          else BankConfig(tech=self.tech, **cfg_kw))
+        key = (self._key(cfg), simulate, solver)
+        if key not in self._reports:
+            self._reports[key] = compiler_mod.compile_bank(
+                cfg, simulate=simulate, solver=solver)
+        return self._reports[key]
+
+    def evaluate(self, cfg: BankConfig) -> DesignPoint:
+        """Scalar-evaluate (and cache) one config."""
+        cfg = self._adopt(cfg)
+        k = self._key(cfg)
+        if k not in self._points:
+            self._points[k] = dse.evaluate(cfg)
+        return self._points[k]
+
+    def sweep(self, query: SweepQuery = SweepQuery()) -> DesignTable:
+        """Evaluate the config lattice; batched via jax.vmap by default."""
+        if query in self._tables:
+            return self._tables[query]
+        cfgs = query.configs(self.tech)
+        keys = [self._key(c) for c in cfgs]
+        missing, seen = [], set()
+        for c, k in zip(cfgs, keys):
+            if k not in self._points and k not in seen:
+                missing.append(c)
+                seen.add(k)
+        if missing:
+            pts = evaluate_batch(missing) if query.batched \
+                else [dse.evaluate(c) for c in missing]
+            for c, p in zip(missing, pts):
+                self._points[self._key(c)] = p
+        table = DesignTable([self._points[k] for k in keys], query)
+        self._tables[query] = table
+        return table
+
+    def match(self, demands: Iterable[Demand],
+              sweep: SweepQuery = SweepQuery(), *, allow_refresh=True,
+              max_banks=1024) -> MatchResult:
+        """Shmoo the lattice against demands; for every demand also size
+        an interleaved multibank macro (paper: multi-banked GCRAM serves
+        the aggregate L2 request stream no single bank can)."""
+        demands = list(demands)
+        table = self.sweep(sweep)
+        grid = dse.shmoo(table.points, demands, allow_refresh=allow_refresh)
+        fastest = table.best("f_max_hz")
+        rows, banks = [], {}
+        for d in demands:
+            key = f"{d.level}:{d.name}"
+            feas = table.feasible(d, allow_refresh=allow_refresh)
+            # densest single bank if one works, else the fastest bank tiled
+            pick = max(feas, key=lambda p: p.cfg.bits / p.area_um2) \
+                if len(feas) else fastest
+            n = mb_mod.banks_needed(pick, d, capacity_bits=d.capacity_bits,
+                                    max_banks=max_banks,
+                                    allow_refresh=allow_refresh) \
+                if pick is not None else max_banks + 1
+            banks[key] = n
+            rows.append({
+                "demand": key, "read_freq_hz": d.read_freq_hz,
+                "lifetime_s": d.lifetime_s,
+                "capacity_bits": d.capacity_bits,
+                "n_feasible": len(feas),
+                # n > max_banks is banks_needed's infeasibility sentinel:
+                # even a max_banks-wide macro cannot serve this demand
+                "macro_feasible": n <= max_banks,
+                "banks_needed": n,
+                "bank": pick.as_dict() if pick is not None else None,
+            })
+        return MatchResult(grid, rows, banks, table)
+
+    def multibank(self, cfg: BankConfig, n_banks: int) -> "mb_mod.MultiBankPoint":
+        """Compose an N-bank interleaved macro around a (cached) bank."""
+        return mb_mod.compose_multibank(self.evaluate(cfg), n_banks)
+
+    def optimize(self, query: OptimizeQuery = OptimizeQuery()
+                 ) -> OptimizeResult:
+        res = dse.grad_optimize(
+            query.cell, target_ret_s=query.target_ret_s,
+            target_freq_hz=query.target_freq_hz, steps=query.steps,
+            lr=query.lr, tech=self.tech)
+        return OptimizeResult(res, query)

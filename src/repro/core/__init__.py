@@ -1,6 +1,11 @@
 """OpenGCRAM core — the paper's contribution as a composable JAX library.
 
-Entry point: repro.core.compiler.GCRAMCompiler (config -> netlists,
-floorplan, timing/power/retention reports); design-space exploration in
-repro.core.dse; multibank macros in repro.core.multibank.
+User entry point: the unified query API in `repro.api` (`Session` +
+`CompileQuery`/`SweepQuery`/`MatchQuery`/`OptimizeQuery`). This package
+holds the underlying models: bank generation (`bank`), analytic +
+transient timing (`timing`), power (`power`), retention (`retention`),
+the scalar/batched design-space evaluators (`dse`, `dse_batch`),
+compilation to netlists + floorplans (`compiler`), and multibank macro
+composition (`multibank`). `GCRAMCompiler`, `dse.sweep` and
+`build_multibank` remain as deprecated shims over `repro.api`.
 """

@@ -1,9 +1,13 @@
-"""GCRAMCompiler facade — the OpenGCRAM user entry point.
+"""Bank compilation: config -> Report (the paper's §III-A output set).
 
-    from repro.core.compiler import GCRAMCompiler
-    rep = GCRAMCompiler(BankConfig(word_size=32, num_words=32,
-                                   cell="gc2t_nn")).compile()
+The user entry point is now the unified query API:
+
+    from repro.api import Session, CompileQuery
+    rep = Session().compile(word_size=32, num_words=32, cell="gc2t_nn")
     rep.write("out/gc32x32")
+
+This module keeps the core implementation (`compile_bank`) plus the
+DEPRECATED `GCRAMCompiler` facade, now a thin shim over the Session.
 
 Produces (the paper's output set, §III-A, minus NDA'd GDS):
   * bank organization + module inventory + floorplan manifest (JSON —
@@ -18,6 +22,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import warnings
 from dataclasses import dataclass
 from typing import Optional
 
@@ -74,6 +79,10 @@ class Report:
                 self.t_cell_sim_s, 1e-15)
         return out
 
+    # uniform Result interface (repro.api.results registers this class)
+    def as_dict(self) -> dict:
+        return self.summary()
+
     def write(self, outdir: str):
         os.makedirs(outdir, exist_ok=True)
         with open(os.path.join(outdir, "report.json"), "w") as f:
@@ -86,25 +95,38 @@ class Report:
         return outdir
 
 
+def compile_bank(cfg: BankConfig, *, simulate: bool = False,
+                 solver: str = "jnp") -> Report:
+    """Core compile flow (used by repro.api.Session.compile)."""
+    bank = build_bank(cfg)
+    t = timing_mod.analyze(bank)
+    ret = None
+    t_sim = None
+    netlists = {}
+    if bank.is_gc:
+        ret = ret_mod.analyze(bank.cell, cfg.tech, wwlls=cfg.wwlls,
+                              wwl_boost=cfg.wwl_boost)
+        ckt, _ = timing_mod.read_netlist(bank)
+        netlists["read_column"] = circuit_to_spice(
+            ckt, f"{cfg.cell} {bank.rows}x{bank.cols} read column")
+        if simulate:
+            t_sim, _ = timing_mod.simulate_read(bank, solver=solver)
+    p = power_mod.analyze(bank, t.f_max_hz,
+                          t_ret_s=ret.t_ret_s if ret else None)
+    return Report(cfg, bank, t, p, ret, t_sim, netlists)
+
+
 class GCRAMCompiler:
+    """DEPRECATED facade; use repro.api.Session().compile(...)."""
+
     def __init__(self, cfg: BankConfig):
         self.cfg = cfg
 
     def compile(self, *, simulate: bool = False, solver: str = "jnp") -> Report:
-        bank = build_bank(self.cfg)
-        t = timing_mod.analyze(bank)
-        ret = None
-        t_sim = None
-        netlists = {}
-        if bank.is_gc:
-            ret = ret_mod.analyze(bank.cell, self.cfg.tech,
-                                  wwlls=self.cfg.wwlls,
-                                  wwl_boost=self.cfg.wwl_boost)
-            ckt, _ = timing_mod.read_netlist(bank)
-            netlists["read_column"] = circuit_to_spice(
-                ckt, f"{self.cfg.cell} {bank.rows}x{bank.cols} read column")
-            if simulate:
-                t_sim, _ = timing_mod.simulate_read(bank, solver=solver)
-        p = power_mod.analyze(bank, t.f_max_hz,
-                              t_ret_s=ret.t_ret_s if ret else None)
-        return Report(self.cfg, bank, t, p, ret, t_sim, netlists)
+        warnings.warn(
+            "GCRAMCompiler is deprecated; use repro.api.Session().compile("
+            "cfg) or Session().run(CompileQuery(cfg))",
+            DeprecationWarning, stacklevel=2)
+        from repro.api import Session
+        return Session(self.cfg.tech).compile(self.cfg, simulate=simulate,
+                                              solver=solver)

@@ -1,11 +1,18 @@
-"""Design-space exploration (paper §V-E + the §VI "future work"
-gradient-based co-optimization, realized here).
+"""Design-space exploration primitives (paper §V-E + the §VI "future
+work" gradient-based co-optimization, realized here).
 
-  * sweep():      evaluate the full config lattice (cell x word_size x
-                  num_words x write-VT x WWLLS) -> metric table
+The user-facing entry point is now the unified query API in `repro.api`
+(`Session` + `SweepQuery`/`MatchQuery`/`OptimizeQuery`); this module
+keeps the underlying models and reference implementations:
+
+  * evaluate():   the SCALAR reference evaluator for one BankConfig —
+                  the batched lattice evaluator (repro.core.dse_batch)
+                  asserts parity against it
+  * sweep():      DEPRECATED shim over Session().sweep(SweepQuery(...))
   * shmoo():      Fig 10 — feasibility of each bank config against each
                   workload's (read-frequency, lifetime) demand
-  * pareto():     area-delay-power-retention Pareto front extraction
+  * pareto():     non-dominated set over caller-chosen metric keys
+                  (sort-based skyline filter)
   * grad_optimize(): continuous co-optimization of (write VT, device
                   widths, WWL boost) by gradient descent through the
                   differentiable retention/timing models — possible
@@ -14,9 +21,9 @@ gradient-based co-optimization, realized here).
 from __future__ import annotations
 
 import itertools
-import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+import warnings
+from dataclasses import dataclass
+from typing import List, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -42,13 +49,21 @@ class DesignPoint:
     refresh_w: float
     retention_s: float
     swing_ok: bool
+    t_read_s: float = 0.0
+    t_write_s: float = 0.0
+
+    @property
+    def standby_w(self) -> float:
+        """Total standby power: leakage + refresh (the paper's idle cost)."""
+        return self.leakage_w + self.refresh_w
 
     def as_dict(self):
         d = {"cell": self.cfg.cell, "word_size": self.cfg.word_size,
              "num_words": self.cfg.num_words, "wwlls": self.cfg.wwlls,
              "write_vt": self.cfg.write_vt}
         for k in ("area_um2", "f_max_hz", "eff_bw_bps", "leakage_w",
-                  "refresh_w", "retention_s", "swing_ok"):
+                  "refresh_w", "retention_s", "swing_ok", "t_read_s",
+                  "t_write_s", "standby_w"):
             d[k] = getattr(self, k)
         return d
 
@@ -76,20 +91,43 @@ def evaluate(cfg: BankConfig) -> DesignPoint:
         wbw = t.f_max_hz * ws / 2
         ebw = rbw + wbw
     return DesignPoint(cfg, bank.area_um2, t.f_max_hz, rbw, wbw, ebw,
-                       p.leakage_w, p.refresh_w, ret, t.read_swing_ok)
+                       p.leakage_w, p.refresh_w, ret, t.read_swing_ok,
+                       t.t_read_s, t.t_write_s)
+
+
+def lattice_configs(cells=("gc2t_nn", "gc2t_np", "gc2t_osos"),
+                    word_sizes=(16, 32, 64, 128),
+                    num_words=(16, 32, 64, 128),
+                    write_vts=(None,), wwlls=(False, True),
+                    tech=SYN40) -> List[BankConfig]:
+    """Expand a config lattice, skipping write-VT flavors that don't match
+    the cell's device family (Si VT overrides on OS cells and vice versa)."""
+    out = []
+    for c, ws, nw, vt, ls in itertools.product(cells, word_sizes, num_words,
+                                               write_vts, wwlls):
+        wf = getattr(CELLS[c], "write_flavor", None)
+        if vt is not None and (wf is None
+                               or wf.startswith("os") != vt.startswith("os")):
+            continue
+        out.append(BankConfig(ws, nw, cell=c, write_vt=vt, wwlls=ls,
+                              tech=tech))
+    return out
 
 
 def sweep(cells=("gc2t_nn", "gc2t_np", "gc2t_osos"),
           word_sizes=(16, 32, 64, 128), num_words=(16, 32, 64, 128),
           write_vts=(None,), wwlls=(False, True)) -> List[DesignPoint]:
-    out = []
-    for c, ws, nw, vt, ls in itertools.product(cells, word_sizes, num_words,
-                                               write_vts, wwlls):
-        if vt is not None and CELLS[c].write_flavor.startswith("os") != \
-                vt.startswith("os"):
-            continue
-        out.append(evaluate(BankConfig(ws, nw, cell=c, write_vt=vt, wwlls=ls)))
-    return out
+    """DEPRECATED: use repro.api.Session().sweep(SweepQuery(...)). This
+    shim routes through the session so old call sites get the batched
+    (vmapped) evaluator for free."""
+    warnings.warn(
+        "dse.sweep() is deprecated; use repro.api.Session().sweep("
+        "SweepQuery(...))", DeprecationWarning, stacklevel=2)
+    from repro.api import Session, SweepQuery
+    q = SweepQuery(cells=tuple(cells), word_sizes=tuple(word_sizes),
+                   num_words=tuple(num_words), write_vts=tuple(write_vts),
+                   wwlls=tuple(wwlls))
+    return list(Session().sweep(q).points)
 
 
 # ---------------------------------------------------------------------------
@@ -120,7 +158,8 @@ def feasible(dp: DesignPoint, d: Demand, *, allow_refresh=True) -> bool:
     return refresh_rate < 0.1 * dp.f_max_hz
 
 
-def shmoo(points: List[DesignPoint], demands: List[Demand]) -> dict:
+def shmoo(points: List[DesignPoint], demands: List[Demand], *,
+          allow_refresh: bool = True) -> dict:
     """Fig 10 grid: demand x bank-config -> pass/fail."""
     grid = {}
     for d in demands:
@@ -128,25 +167,42 @@ def shmoo(points: List[DesignPoint], demands: List[Demand]) -> dict:
         for dp in points:
             key = f"{dp.cfg.cell}/{dp.cfg.word_size}x{dp.cfg.num_words}" + \
                 ("+ls" if dp.cfg.wwlls else "")
-            row[key] = feasible(dp, d)
+            row[key] = feasible(dp, d, allow_refresh=allow_refresh)
         grid[f"{d.level}:{d.name}"] = row
     return grid
 
 
-def pareto(points: List[DesignPoint], keys=("area_um2", "f_max_hz",
-                                            "leakage_w")) -> List[DesignPoint]:
-    """Non-dominated set: minimize area & leakage, maximize f."""
-    def metric(dp):
-        return (dp.area_um2, -dp.f_max_hz, dp.leakage_w + dp.refresh_w)
+# metrics where bigger is better; everything else is minimized
+PARETO_MAXIMIZE = frozenset({"f_max_hz", "read_bw_bps", "write_bw_bps",
+                             "eff_bw_bps", "retention_s"})
 
-    pts = [(metric(dp), dp) for dp in points if dp.swing_ok]
-    front = []
-    for m, dp in pts:
-        dominated = any(
-            all(o[i] <= m[i] for i in range(3)) and any(
-                o[i] < m[i] for i in range(3)) for o, _ in pts)
-        if not dominated:
+
+def pareto(points: List[DesignPoint],
+           keys: Sequence[str] = ("area_um2", "f_max_hz", "standby_w"),
+           ) -> List[DesignPoint]:
+    """Non-dominated set over the chosen metric `keys` (DesignPoint
+    attribute names). Metrics in PARETO_MAXIMIZE are maximized, the rest
+    minimized. Sort-based skyline filter: after a lexicographic sort any
+    dominator of a point precedes it, so each candidate is compared only
+    against the current front — O(n log n + n * |front|) instead of the
+    old all-pairs O(n^2) scan (which also ignored `keys` entirely).
+    Returns the front sorted by the first key; infeasible (swing-fail)
+    points are excluded."""
+    def metric(dp):
+        return tuple(-getattr(dp, k) if k in PARETO_MAXIMIZE
+                     else getattr(dp, k) for k in keys)
+
+    def dominates(a, b):
+        return all(x <= y for x, y in zip(a, b)) and \
+            any(x < y for x, y in zip(a, b))
+
+    ranked = sorted(((metric(dp), i, dp) for i, dp in enumerate(points)
+                     if dp.swing_ok), key=lambda t: (t[0], t[1]))
+    front, front_vals = [], []
+    for m, _, dp in ranked:
+        if not any(dominates(fv, m) for fv in front_vals):
             front.append(dp)
+            front_vals.append(m)
     return front
 
 

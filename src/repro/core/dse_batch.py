@@ -1,0 +1,177 @@
+"""Batched (struct-of-arrays) lattice evaluator for design-space sweeps.
+
+`dse.evaluate` is the scalar reference: per config it rebuilds the bank,
+re-integrates retention, and issues a dozen single-element jnp dispatches
+— fine for one point, slow for a lattice. This module evaluates a whole
+lattice at once:
+
+  1. group configs by cell topology (cell, write-VT override, WWLLS,
+     WWL boost, tech) so array shapes stay static per group;
+  2. compute the group-constant electricals ONCE per group with the SAME
+     scalar calls `dse.evaluate` makes (read/leak currents at the
+     written SN level, the retention integral, the write SN settle);
+  3. `jax.vmap` the per-point analytic timing + power algebra across the
+     group's struct-of-arrays (rows, wire RC, word size, ...) in float64
+     (jax.experimental.enable_x64), reusing the formula kernels from
+     `repro.core.timing`.
+
+Because the group constants come from the identical scalar calls and the
+per-point algebra is the identical float64 expression tree, batched
+results match `dse.evaluate` to well under 1e-6 relative — asserted in
+tests/test_api.py and benchmarks/bench_sweep.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.core import bank as bank_mod
+from repro.core import retention as ret_mod
+from repro.core import timing as timing_mod
+from repro.core.bank import BankConfig, build_bank
+from repro.core.dse import DesignPoint
+from repro.core.power import PERIPH_LEAK_W_PER_UM2
+from repro.core.spice import devices as dv
+
+
+def evaluate_batch(cfgs: Sequence[BankConfig]) -> List[DesignPoint]:
+    """Evaluate every config; returns DesignPoints in input order."""
+    groups: Dict[tuple, List[int]] = {}
+    for i, cfg in enumerate(cfgs):
+        key = (cfg.cell, cfg.write_vt, cfg.wwlls, cfg.wwl_boost, id(cfg.tech))
+        groups.setdefault(key, []).append(i)
+    out: List[DesignPoint] = [None] * len(cfgs)
+    for idx in groups.values():
+        for i, p in zip(idx, _evaluate_group([cfgs[i] for i in idx])):
+            out[i] = p
+    return out
+
+
+def _group_constants(cfg0: BankConfig, bank0) -> dict:
+    """Electricals that depend only on the cell topology — computed with
+    the same scalar calls the reference `dse.evaluate` path makes."""
+    tech = cfg0.tech
+    cell = bank0.cell
+    if bank0.is_gc:
+        bit = 0 if cell.read_on_sn_low else 1
+        v_sn = cell.v_sn_written(tech, bit, wwlls=cfg0.wwlls,
+                                 wwl_boost=cfg0.wwl_boost)
+        v_rbl0 = 0.0 if cell.predischarge else tech.vdd
+        swing = tech.v_sense_se
+        v_rbl_mid = v_rbl0 + (0.5 * swing if cell.predischarge
+                              else -0.5 * swing)
+        i_cell = cell.i_read(tech, v_sn, v_rbl_mid)
+        off_sn = cell.v_sn_written(tech, 1 if cell.read_on_sn_low else 0)
+        i_leak1 = cell.i_leak_rbl(tech, off_sn)
+        t_ret = ret_mod.analyze(cell, tech, wwlls=cfg0.wwlls,
+                                wwl_boost=cfg0.wwl_boost).t_ret_s
+        wf = cell.wf(tech)
+        v_gate = tech.vdd + (cfg0.wwl_boost if cfg0.wwlls else 0.0)
+        i_on = abs(float(dv.channel_current(
+            wf, cell.w_write, cell.l_write, v_gate, tech.vdd,
+            tech.vdd * 0.45)))
+        return dict(i_cell=i_cell, i_leak1=i_leak1, dv_sense=swing,
+                    t_ret=t_ret,
+                    t_sn=cell.sn_cap(tech) * 0.9 * tech.vdd
+                    / max(i_on, 1e-12),
+                    cell_leak_per_bit=0.0)
+    return dict(i_cell=cell.i_read(tech), i_leak1=0.0,
+                dv_sense=tech.v_sense_diff, t_ret=float("inf"), t_sn=0.0,
+                cell_leak_per_bit=cell.cell_leakage(tech))
+
+
+def _evaluate_group(cfgs: List[BankConfig]) -> List[DesignPoint]:
+    tech = cfgs[0].tech
+    banks = [build_bank(c) for c in cfgs]
+    is_gc = banks[0].is_gc
+    wwlls = cfgs[0].wwlls
+    gc = _group_constants(cfgs[0], banks[0])
+    i_cell, i_leak1, dv_sense = gc["i_cell"], gc["i_leak1"], gc["dv_sense"]
+    t_ret, t_sn = gc["t_ret"], gc["t_sn"]
+
+    # struct-of-arrays: structural + wire quantities per point
+    rows = np.array([b.rows for b in banks], np.float64)
+    wl = np.array([bank_mod.wordline_rc(b) for b in banks], np.float64)
+    bl = np.array([bank_mod.bitline_rc(b) for b in banks], np.float64)
+    t_dec = np.array([timing_mod.decoder_delay(b.rows) for b in banks],
+                     np.float64)
+    ws = np.array([c.word_size for c in cfgs], np.float64)
+    bits = np.array([c.bits for c in cfgs], np.float64)
+    periph = np.array([sum(b.modules.values()) for b in banks], np.float64)
+    has_mux = np.array([b.has_colmux for b in banks])
+    swing_ok = (i_cell > 3.0 * ((rows - 1.0) * i_leak1)) if is_gc \
+        else np.full(len(banks), i_cell > 0.0)
+
+    fo4 = timing_mod.FO4_S
+    sa_s, dff_s = tech.sa_delay_s, tech.dff_delay_s
+    unit0 = tech.stage_delay_s
+    vdd = tech.vdd
+    margin, cap = timing_mod.CHAIN_MARGIN, float(timing_mod.CHAIN_MAX_STAGES)
+    growth = timing_mod.CHAIN_UNIT_GROWTH
+    refresh_on = is_gc and t_ret > 0 and np.isfinite(t_ret)
+
+    def point(rows_i, r_wl, c_wl, r_bl, c_bl, t_dec_i, ws_i, bits_i,
+              periph_i, mux_i):
+        # -- read path (timing.analyze, vectorized)
+        t_wl = timing_mod.elmore_delay(timing_mod.WL_DRIVER_R_OHM, r_wl, c_wl)
+        c_bl_read = c_bl + timing_mod.SA_INPUT_C_F
+        leak = (rows_i - 1.0) * i_leak1
+        i_net = jnp.maximum(i_cell - leak, 1e-12)
+        t_cell = timing_mod.cell_swing_time(dv_sense, c_bl_read, i_net, r_bl)
+        analog = t_wl + t_cell + jnp.where(mux_i, 2 * fo4, 0.0) + sa_s
+        if is_gc:
+            analog = analog + timing_mod.REF_SETTLE_S
+        # delay-chain unit coarsening: unit0 * growth**k, smallest k with
+        # analog*margin/unit <= cap (exact while-loop semantics; the log
+        # estimate is corrected one step either way for float edges)
+        a_m = analog * margin
+        k = jnp.maximum(jnp.ceil(jnp.log(a_m / (unit0 * cap))
+                                 / jnp.log(growth)), 0.0)
+        k = jnp.where(a_m / (unit0 * growth ** k) > cap, k + 1.0, k)
+        k = jnp.where((k > 0.0) & (a_m / (unit0 * growth ** (k - 1.0))
+                                   <= cap), k - 1.0, k)
+        unit = unit0 * growth ** k
+        t_chain = jnp.ceil(a_m / unit) * unit
+        t_read = dff_s + t_dec_i + t_chain + dff_s
+        # -- write path (timing.write_time, vectorized)
+        t_bl = timing_mod.elmore_delay(timing_mod.WBL_DRIVER_R_OHM, r_bl,
+                                       c_bl)
+        t_wr_core = t_wl + t_bl + (t_sn if is_gc else 2 * fo4)
+        t_write = dff_s + t_dec_i + jnp.maximum(t_wr_core, t_chain * 0.6)
+        f = 1.0 / jnp.maximum(t_read, t_write)
+        # -- standby power (power.analyze leakage + refresh, vectorized)
+        leakage = bits_i * gc["cell_leak_per_bit"] \
+            + periph_i * PERIPH_LEAK_W_PER_UM2
+        e_write = (c_wl * vdd ** 2 + ws_i * c_bl * vdd ** 2
+                   + ws_i * 6e-15 * vdd ** 2)
+        if wwlls:
+            e_write = e_write * 1.25
+        refresh = bits_i * (e_write / jnp.maximum(ws_i, 1.0)) / t_ret \
+            if refresh_on else jnp.zeros_like(e_write)
+        return t_read, t_write, f, leakage, refresh
+
+    with enable_x64():
+        arrs = [jnp.asarray(a, jnp.float64) for a in
+                (rows, wl[:, 0], wl[:, 1], bl[:, 0], bl[:, 1], t_dec, ws,
+                 bits, periph)]
+        t_read, t_write, f, leakage, refresh = jax.vmap(point)(
+            *arrs, jnp.asarray(has_mux))
+    t_read, t_write, f, leakage, refresh = (
+        np.asarray(a) for a in (t_read, t_write, f, leakage, refresh))
+
+    out = []
+    for j, (cfg, b) in enumerate(zip(cfgs, banks)):
+        fj, wsz = float(f[j]), cfg.word_size
+        if is_gc:
+            rbw = wbw = fj * wsz
+        else:
+            rbw = wbw = fj * wsz / 2
+        out.append(DesignPoint(
+            cfg, b.area_um2, fj, rbw, wbw, rbw + wbw, float(leakage[j]),
+            float(refresh[j]), t_ret, bool(swing_ok[j]), float(t_read[j]),
+            float(t_write[j])))
+    return out

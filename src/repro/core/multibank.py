@@ -10,12 +10,11 @@ area adds a routing/arbiter overhead per bank.
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass
 
-from repro.core import dse, power as power_mod, retention as ret_mod, \
-    timing as timing_mod
-from repro.core.bank import BankConfig, build_bank
-from repro.core.layout import module_area_um2
+from repro.core import dse
+from repro.core.bank import BankConfig
 
 XBAR_OVERHEAD = 0.06     # crossbar/arbiter area per bank (fraction)
 XBAR_DELAY_S = 35e-12    # one crossbar hop on the read path
@@ -42,25 +41,40 @@ class MultiBankPoint:
         return d
 
 
-def build_multibank(cfg: BankConfig, n_banks: int) -> MultiBankPoint:
-    dp = dse.evaluate(cfg)
-    bank = build_bank(cfg)
-    t = timing_mod.analyze(bank)
+def compose_multibank(dp: dse.DesignPoint, n_banks: int) -> MultiBankPoint:
+    """Compose an N-bank interleaved macro around an already-evaluated
+    bank (the core implementation; repro.api.Session.multibank caches
+    the bank evaluation and calls this)."""
+    if dp.t_read_s <= 0 or dp.t_write_s <= 0:
+        raise ValueError(
+            "compose_multibank needs a DesignPoint with t_read_s/t_write_s "
+            "(from dse.evaluate or the batched evaluator); got "
+            f"t_read_s={dp.t_read_s}, t_write_s={dp.t_write_s}")
     # crossbar hop slows the read path by one stage-quantized hop
-    t_read = t.t_read_s + XBAR_DELAY_S
-    f = 1.0 / max(t_read, t.t_write_s)
+    t_read = dp.t_read_s + XBAR_DELAY_S
+    f = 1.0 / max(t_read, dp.t_write_s)
     area = n_banks * dp.area_um2 * (1.0 + XBAR_OVERHEAD)
     return MultiBankPoint(
         n_banks=n_banks, bank=dp, area_um2=area, f_max_hz=f,
         eff_bw_bps=n_banks * dp.eff_bw_bps * (f / dp.f_max_hz),
-        capacity_bits=n_banks * cfg.bits,
+        capacity_bits=n_banks * dp.cfg.bits,
         leakage_w=n_banks * dp.leakage_w,
         refresh_w=n_banks * dp.refresh_w,
         retention_s=dp.retention_s)
 
 
+def build_multibank(cfg: BankConfig, n_banks: int) -> MultiBankPoint:
+    """DEPRECATED: use repro.api.Session().multibank(cfg, n_banks)."""
+    warnings.warn(
+        "build_multibank() is deprecated; use repro.api.Session()"
+        ".multibank(cfg, n_banks)", DeprecationWarning, stacklevel=2)
+    from repro.api import Session
+    return Session(cfg.tech).multibank(cfg, n_banks)
+
+
 def banks_needed(dp: dse.DesignPoint, demand: dse.Demand,
-                 capacity_bits: int = 0, max_banks: int = 1024) -> int:
+                 capacity_bits: int = 0, max_banks: int = 1024, *,
+                 allow_refresh: bool = True) -> int:
     """Smallest bank count whose interleaved macro meets the demand's
     per-bank read frequency is 1 by construction (interleaving divides the
     request stream); what multibanking buys is AGGREGATE frequency and
@@ -74,6 +88,7 @@ def banks_needed(dp: dse.DesignPoint, demand: dse.Demand,
     # retention/refresh feasibility is per bank (unchanged by banking)
     if not dse.feasible(dp, dse.Demand(demand.name, demand.level,
                                        min(demand.read_freq_hz, dp.f_max_hz),
-                                       demand.lifetime_s)):
+                                       demand.lifetime_s),
+                        allow_refresh=allow_refresh):
         return max_banks + 1
     return n

@@ -29,6 +29,37 @@ from repro.core.techfile import TechFile
 FO4_S = 18e-12      # fanout-4 inverter delay in syn40
 LE_BRANCH = 2.0     # logical-effort branching per decode stage
 REF_SETTLE_S = 40e-12  # GC single-ended read: reference settle adder
+WL_DRIVER_R_OHM = 2.5e3 / 4.0   # sized wordline driver
+WBL_DRIVER_R_OHM = 800.0        # write-bitline driver
+SA_INPUT_C_F = 2e-15            # SA input + mux junction on the RBL
+CHAIN_MARGIN = 1.3              # control chain covers analog path by 30%
+CHAIN_MAX_STAGES = 64           # before switching to a coarser unit
+CHAIN_UNIT_GROWTH = 4.0
+
+
+# -- pure formula kernels, shared with the batched lattice evaluator
+#    (repro.core.dse_batch); elementwise, so they accept scalars or arrays
+
+def elmore_delay(r_drv, r, c):
+    """Driver-R + distributed-RC Elmore delay of one wire."""
+    return 0.69 * (r_drv * c + 0.5 * r * c)
+
+
+def cell_swing_time(dv_sense, c_bl, i_net, r_bl):
+    """Sense-swing time: current derating (Vds droop over the swing) +
+    distributed-RC Elmore of the bitline ladder; calibrated against the
+    transient engine to <= 15% (the GEMTOO-class gap, asserted in tests)."""
+    return dv_sense * c_bl / (0.75 * i_net) + 0.35 * r_bl * c_bl + 9e-12
+
+
+def chain_unit(analog_s, unit_s):
+    """Delay-chain stage granularity: very slow paths (OS reads) switch to
+    a coarser unit, capping the chain at CHAIN_MAX_STAGES (a real
+    controller would divide the clock instead). Scalar reference; the
+    batched evaluator vectorizes the same recurrence."""
+    while analog_s * CHAIN_MARGIN / unit_s > CHAIN_MAX_STAGES:
+        unit_s *= CHAIN_UNIT_GROWTH
+    return unit_s
 
 
 @dataclass
@@ -57,8 +88,7 @@ def decoder_delay(rows: int) -> float:
 
 def wordline_delay(bank) -> float:
     r, c = bank_mod.wordline_rc(bank)
-    drv_r = 2.5e3 / 4.0  # sized driver
-    return 0.69 * (drv_r * c + 0.5 * r * c)
+    return elmore_delay(WL_DRIVER_R_OHM, r, c)
 
 
 def cell_read_time(bank, *, v_sn=None) -> tuple:
@@ -66,7 +96,7 @@ def cell_read_time(bank, *, v_sn=None) -> tuple:
     (seconds, swing_ok)."""
     tech = bank.cfg.tech
     _, c_bl = bank_mod.bitline_rc(bank)
-    c_bl += 2e-15  # SA input + mux junction
+    c_bl += SA_INPUT_C_F
     if isinstance(bank.cell, Sram6T):
         i = bank.cell.i_read(tech)
         dv_sense = tech.v_sense_diff
@@ -87,12 +117,8 @@ def cell_read_time(bank, *, v_sn=None) -> tuple:
         dv_sense = swing
     i_net = max(i - leak, 1e-12)
     ok = i > 3.0 * leak
-    # current derating (Vds droop over the swing) + distributed-RC Elmore
-    # of the bitline ladder: calibrated against the transient engine to
-    # <= 15% (the GEMTOO-class analytic/sim gap, asserted in tests).
     r_bl, _ = bank_mod.bitline_rc(bank)
-    t = dv_sense * c_bl / (0.75 * i_net) + 0.35 * r_bl * c_bl + 9e-12
-    return t, ok
+    return cell_swing_time(dv_sense, c_bl, i_net, r_bl), ok
 
 
 def write_time(bank) -> float:
@@ -100,7 +126,7 @@ def write_time(bank) -> float:
     tech = bank.cfg.tech
     t_wl = wordline_delay(bank)
     r_bl, c_bl = bank_mod.bitline_rc(bank)
-    t_bl = 0.69 * (800.0 * c_bl + 0.5 * r_bl * c_bl)  # write driver ~800 ohm
+    t_bl = elmore_delay(WBL_DRIVER_R_OHM, r_bl, c_bl)
     if isinstance(bank.cell, Sram6T):
         return t_wl + t_bl + 2 * FO4_S
     cell = bank.cell
@@ -122,13 +148,9 @@ def analyze(bank) -> Timing:
     if bank.is_gc:
         analog += REF_SETTLE_S  # single-ended sensing reference settle
     # control delay chain must cover the analog path with >= 30% margin,
-    # quantized to stages (the Fig 7a staircase). Very slow paths (OS
-    # reads) switch to a coarser stage unit, capping the chain at 64
-    # stages (a real controller would divide the clock instead).
-    unit = tech.stage_delay_s
-    while analog * 1.3 / unit > 64:
-        unit *= 4.0
-    stages = int(math.ceil(analog * 1.3 / unit))
+    # quantized to stages (the Fig 7a staircase)
+    unit = chain_unit(analog, tech.stage_delay_s)
+    stages = int(math.ceil(analog * CHAIN_MARGIN / unit))
     t_chain = stages * unit
     t_read = tech.dff_delay_s + t_dec + t_chain + tech.dff_delay_s
     t_wr = tech.dff_delay_s + t_dec + max(write_time(bank), t_chain * 0.6)

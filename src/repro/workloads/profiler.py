@@ -148,7 +148,8 @@ def plan_memory(profile: Profile, points=None) -> Dict[str, dict]:
     """For each buffer class pick the smallest-area feasible GCRAM bank."""
     from repro.core import dse
     if points is None:
-        points = dse.sweep()
+        from repro.api import Session
+        points = Session().sweep().points
     classes = {
         "activation_cache": Demand("act", "L1", profile.l1_read_hz,
                                    profile.act_lifetime_s),

@@ -1,0 +1,287 @@
+"""Unified repro.api surface: Session/Query dispatch, batched-sweep
+parity vs the scalar reference, result hierarchy, caching, deprecated
+shims, pareto keys, banks_needed edge cases."""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import (CompileQuery, DesignTable, MatchQuery, MatchResult,
+                       OptimizeQuery, Result, Session, SweepQuery)
+from repro.core import dse
+from repro.core.bank import BankConfig
+from repro.core.compiler import GCRAMCompiler
+from repro.core.dse import Demand
+from repro.core.multibank import banks_needed, build_multibank
+
+SMALL = SweepQuery(cells=("gc2t_nn", "gc2t_osos", "sram6t"),
+                   word_sizes=(16, 32), num_words=(16, 32),
+                   wwlls=(False, True))
+
+PARITY_FIELDS = ("area_um2", "f_max_hz", "read_bw_bps", "write_bw_bps",
+                 "eff_bw_bps", "leakage_w", "refresh_w", "retention_s",
+                 "t_read_s", "t_write_s")
+
+
+def _assert_parity(point, ref, rel=1e-6):
+    for f in PARITY_FIELDS:
+        a, b = getattr(point, f), getattr(ref, f)
+        if np.isinf(b):
+            assert np.isinf(a), (f, point.cfg)
+        else:
+            assert a == pytest.approx(b, rel=rel), (f, point.cfg)
+    assert point.swing_ok == ref.swing_ok, point.cfg
+
+
+# ---------------------------------------------------------------------------
+# tentpole: batched sweep == scalar reference
+# ---------------------------------------------------------------------------
+
+def test_batched_sweep_matches_scalar_on_default_lattice():
+    s = Session()
+    table = s.run(SweepQuery())
+    cfgs = SweepQuery().configs(s.tech)
+    assert isinstance(table, DesignTable) and len(table) == len(cfgs)
+    for p, cfg in zip(table, cfgs):
+        _assert_parity(p, dse.evaluate(cfg))
+
+
+def test_batched_sweep_covers_sram_and_os_groups():
+    s = Session()
+    table = s.sweep(SMALL)
+    cells = {p.cfg.cell for p in table}
+    assert cells == {"gc2t_nn", "gc2t_osos", "sram6t"}
+    for p in table:
+        _assert_parity(p, dse.evaluate(p.cfg))
+
+
+def test_scalar_fallback_sweep_matches_batched():
+    s = Session()
+    q = dataclasses.replace(SMALL, batched=False)
+    slow = Session().sweep(q)
+    fast = s.sweep(SMALL)
+    for a, b in zip(slow, fast):
+        _assert_parity(b, a)
+
+
+# ---------------------------------------------------------------------------
+# session caching
+# ---------------------------------------------------------------------------
+
+def test_session_caches_points_and_tables(monkeypatch):
+    s = Session()
+    calls = []
+    orig = dse.evaluate
+    monkeypatch.setattr(dse, "evaluate",
+                        lambda cfg: (calls.append(cfg), orig(cfg))[1])
+    cfg = BankConfig(16, 16, "gc2t_nn")
+    p1 = s.evaluate(cfg)
+    p2 = s.evaluate(BankConfig(16, 16, "gc2t_nn"))
+    assert p1 is p2 and len(calls) == 1
+    t1 = s.sweep(SMALL)
+    t2 = s.sweep(SMALL)
+    assert t1 is t2
+    # sweep populated the point cache: no further scalar evaluations
+    n = len(calls)
+    s.evaluate(t1[0].cfg)
+    assert len(calls) == n
+    # and the pre-sweep scalar point was reused inside the sweep
+    assert any(p is p1 for p in t1)
+
+
+# ---------------------------------------------------------------------------
+# CompileQuery + uniform results
+# ---------------------------------------------------------------------------
+
+def test_compile_query_matches_deprecated_facade(tmp_path):
+    cfg = BankConfig(32, 32, cell="gc2t_nn")
+    rep = Session().run(CompileQuery(cfg))
+    with pytest.warns(DeprecationWarning):
+        legacy = GCRAMCompiler(cfg).compile()
+    assert rep.as_dict() == legacy.summary()
+    assert isinstance(rep, Result)
+    out = rep.write(str(tmp_path / "gc"))
+    assert os.path.exists(os.path.join(out, "report.json"))
+    assert os.path.exists(os.path.join(out, "read_column.sp"))
+
+
+def test_results_write_uniformly(tmp_path):
+    s = Session()
+    table = s.sweep(SMALL)
+    table.write(str(tmp_path))
+    data = json.load(open(tmp_path / table.filename))
+    assert data["n_points"] == len(table)
+    m = s.match([Demand("toy", "L1", 1e6, 1e-9)], SMALL)
+    m.write(str(tmp_path))
+    data = json.load(open(tmp_path / m.filename))
+    assert data["banks_needed"]["L1:toy"] == 1
+    o = s.run(OptimizeQuery(target_ret_s=1e-6, steps=40))
+    o.write(str(tmp_path))
+    data = json.load(open(tmp_path / o.filename))
+    assert "write_vt" in data
+    assert all(isinstance(r, Result) for r in (table, m, o))
+
+
+# ---------------------------------------------------------------------------
+# MatchQuery
+# ---------------------------------------------------------------------------
+
+def test_match_query_shmoo_and_multibank_sizing():
+    s = Session()
+    table = s.sweep(SMALL)
+    fast = table.best("f_max_hz")
+    demands = (Demand("easy", "L1", fast.f_max_hz * 0.5, 1e-9),
+               Demand("hard", "L2", fast.f_max_hz * 3.5, 1e-9))
+    m = s.run(MatchQuery(demands=demands, sweep=SMALL))
+    assert isinstance(m, MatchResult)
+    assert m.grid == dse.shmoo(table.points, list(demands))
+    assert m.banks_needed["L1:easy"] == 1
+    assert m.banks_needed["L2:hard"] == 4          # ceil(3.5) fastest banks
+    assert 0.0 < m.pass_rate < 1.0
+    hard = [r for r in m.rows if r["demand"] == "L2:hard"][0]
+    assert hard["n_feasible"] == 0 and hard["bank"] is not None
+
+
+def test_match_allow_refresh_threads_into_multibank_sizing():
+    """A demand only serviceable via refresh must not get a 'feasible'
+    multibank sizing when the query forbids refresh."""
+    s = Session()
+    table = s.sweep(SMALL)
+    # lifetime longer than any gc bank's native retention but within
+    # refresh reach: feasible with refresh, infeasible without
+    ref = max((p for p in table if p.swing_ok and np.isfinite(p.retention_s)),
+              key=lambda p: p.retention_s)
+    d = Demand("refreshy", "L2", ref.f_max_hz * 0.1, ref.retention_s * 10)
+    q = SweepQuery(cells=("gc2t_nn", "gc2t_osos"), word_sizes=(16, 32),
+                   num_words=(16, 32), wwlls=(False, True))
+    with_ref = s.match([d], q, allow_refresh=True)
+    without = s.match([d], q, allow_refresh=False)
+    assert with_ref.rows[0]["macro_feasible"]
+    assert not without.rows[0]["macro_feasible"]
+    assert without.banks_needed["L2:refreshy"] == 1025  # sentinel
+    assert without.rows[0]["n_feasible"] == 0
+
+
+def test_compose_multibank_rejects_timing_free_points():
+    from repro.core.multibank import compose_multibank
+    dp = Session().evaluate(BankConfig(16, 16, "gc2t_nn"))
+    stale = dataclasses.replace(dp, t_read_s=0.0, t_write_s=0.0)
+    with pytest.raises(ValueError):
+        compose_multibank(stale, 4)
+    assert compose_multibank(dp, 4).n_banks == 4
+
+
+def test_design_point_as_dict_carries_new_metrics():
+    dp = Session().evaluate(BankConfig(16, 16, "gc2t_nn"))
+    d = dp.as_dict()
+    assert d["t_read_s"] == dp.t_read_s > 0
+    assert d["t_write_s"] == dp.t_write_s > 0
+    assert d["standby_w"] == dp.leakage_w + dp.refresh_w
+
+
+def test_match_capacity_driven_sizing():
+    s = Session()
+    fast = s.sweep(SMALL).best("f_max_hz")
+    d = Demand("big", "L2", fast.f_max_hz * 0.25, 1e-9,
+               capacity_bits=10 * fast.cfg.bits)
+    m = s.match([d], SMALL)
+    # some feasible bank exists; the macro must still cover the capacity
+    assert m.banks_needed["L2:big"] >= 2
+
+
+# ---------------------------------------------------------------------------
+# pareto: keys respected + sort-based filter equals brute force
+# ---------------------------------------------------------------------------
+
+def _brute_pareto(points, keys):
+    def metric(dp):
+        return tuple(-getattr(dp, k) if k in dse.PARETO_MAXIMIZE
+                     else getattr(dp, k) for k in keys)
+    pts = [p for p in points if p.swing_ok]
+    out = []
+    for p in pts:
+        m = metric(p)
+        dom = any(all(x <= y for x, y in zip(metric(q), m))
+                  and any(x < y for x, y in zip(metric(q), m)) for q in pts)
+        if not dom:
+            out.append(p)
+    return out
+
+
+def test_pareto_respects_keys_and_matches_bruteforce():
+    pts = Session().sweep(SMALL).points
+    fronts = {}
+    for keys in [("area_um2", "f_max_hz"),
+                 ("area_um2", "retention_s"),
+                 ("area_um2", "f_max_hz", "standby_w")]:
+        front = dse.pareto(pts, keys=keys)
+        assert {id(p) for p in front} == \
+            {id(p) for p in _brute_pareto(pts, keys)}, keys
+        fronts[keys] = front
+    # single-key fronts = all points achieving the optimum; different keys
+    # select different points (so `keys` is demonstrably not ignored)
+    area_front = dse.pareto(pts, keys=("area_um2",))
+    amin = min(p.area_um2 for p in pts if p.swing_ok)
+    assert all(p.area_um2 == amin for p in area_front)
+    f_front = dse.pareto(pts, keys=("f_max_hz",))
+    fmax = max(p.f_max_hz for p in pts if p.swing_ok)
+    assert all(p.f_max_hz == fmax for p in f_front)
+    assert {id(p) for p in area_front} != {id(p) for p in f_front}
+
+
+def test_design_table_pareto_and_best():
+    table = Session().sweep(SMALL)
+    front = table.pareto()
+    assert 0 < len(front) <= len(table)
+    assert isinstance(front, DesignTable)
+    assert front.best("f_max_hz").f_max_hz == \
+        max(p.f_max_hz for p in front if p.swing_ok)
+
+
+# ---------------------------------------------------------------------------
+# deprecated shims stay functional
+# ---------------------------------------------------------------------------
+
+def test_deprecated_sweep_shim():
+    with pytest.warns(DeprecationWarning):
+        pts = dse.sweep(cells=("gc2t_nn",), word_sizes=(16,),
+                        num_words=(16, 32), wwlls=(False,))
+    assert len(pts) == 2
+    _assert_parity(pts[0], dse.evaluate(pts[0].cfg))
+
+
+def test_deprecated_build_multibank_shim():
+    cfg = BankConfig(16, 16, "gc2t_nn")
+    with pytest.warns(DeprecationWarning):
+        mb = build_multibank(cfg, 4)
+    assert mb.n_banks == 4
+    assert mb.capacity_bits == 4 * cfg.bits
+
+
+# ---------------------------------------------------------------------------
+# banks_needed edge cases (satellite)
+# ---------------------------------------------------------------------------
+
+def test_banks_needed_edge_cases():
+    dp = Session().evaluate(BankConfig(32, 32, "gc2t_nn"))
+    easy = Demand("e", "L2", dp.f_max_hz * 0.9, 1e-9)
+    assert banks_needed(dp, easy) == 1
+    # frequency-driven: ceil(3.2x) banks
+    assert banks_needed(dp, Demand("f", "L2", dp.f_max_hz * 3.2, 1e-9)) == 4
+    # capacity-driven
+    assert banks_needed(dp, easy, capacity_bits=10 * dp.cfg.bits) == 10
+    # both -> max wins
+    assert banks_needed(dp, Demand("f", "L2", dp.f_max_hz * 3.2, 1e-9),
+                        capacity_bits=2 * dp.cfg.bits) == 4
+    # infeasible points return the max_banks + 1 sentinel
+    bad_swing = dataclasses.replace(dp, swing_ok=False)
+    assert banks_needed(bad_swing, easy) == 1025
+    assert banks_needed(bad_swing, easy, max_banks=16) == 17
+    dead = dataclasses.replace(dp, f_max_hz=0.0)
+    assert banks_needed(dead, easy) == 1025
+    # retention too short for refresh to keep up -> infeasible per bank
+    rotten = dataclasses.replace(dp, retention_s=1e-12)
+    assert banks_needed(rotten, Demand("l", "L2", dp.f_max_hz * 0.5,
+                                       1.0)) == 1025

@@ -1,7 +1,7 @@
 """Paper-fidelity (C1-C10) + property tests for the GCRAM compiler core."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core import dse, layout, power, retention, timing
 from repro.core.bank import BankConfig, build_bank, organize

@@ -81,6 +81,68 @@ def test_engine_with_int8_cache():
     assert len(done) == 3
 
 
+def test_engine_slot_lifecycle():
+    """admit -> decode -> retire, step by step: slots fill FIFO from the
+    queue, retire exactly at max_new_tokens, and free slots re-admit."""
+    cfg, params = _engine()
+    eng = ServeEngine(cfg, params, n_slots=2, window=64)
+    assert eng.step() is False                 # idle engine: nothing to do
+    rng = np.random.default_rng(2)
+    for i in range(3):
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab_size, 5)
+                           .astype(np.int32),
+                           max_new_tokens=2))
+    assert eng.active == [None, None] and len(eng.queue) == 3
+    # step 1: admits rids 0,1 (prefill emits token 1), decode emits token
+    # 2 -> both hit max_new_tokens and retire; rid 2 still queued
+    assert eng.step() is True
+    assert [r.rid for r in eng.done] == [0, 1]
+    assert eng.active == [None, None]
+    assert [r.rid for r in eng.queue] == [2]
+    # step 2: admits rid 2 into a freed slot and finishes it
+    assert eng.step() is True
+    assert [r.rid for r in eng.done] == [0, 1, 2]
+    assert all(len(r.out_tokens) == 2 for r in eng.done)
+    # drained: queue empty, all slots free, engine idle again
+    assert not eng.queue and eng.active == [None, None]
+    assert eng.step() is False
+
+
+def test_engine_partial_retire_keeps_long_request():
+    """Unequal lengths: the short request retires and frees its slot
+    while the long one keeps decoding in place."""
+    cfg, params = _engine()
+    eng = ServeEngine(cfg, params, n_slots=2, window=64)
+    prompt = (np.arange(4, dtype=np.int32) + 1) % cfg.vocab_size
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=1))
+    eng.submit(Request(rid=1, prompt=prompt, max_new_tokens=5))
+    eng.step()
+    assert [r.rid for r in eng.done] == [0]
+    assert eng.active[0] is None and eng.active[1].rid == 1
+    done, steps = eng.run()
+    assert [r.rid for r in done] == [0, 1]
+    assert len(done[1].out_tokens) == 5
+
+
+def test_engine_run_drains_queue_within_step_budget():
+    """run() serves queue > slots completely and reports its step count."""
+    cfg, params = _engine()
+    eng = ServeEngine(cfg, params, n_slots=2, window=64)
+    rng = np.random.default_rng(3)
+    for i in range(6):
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab_size, 4)
+                           .astype(np.int32),
+                           max_new_tokens=3))
+    done, steps = eng.run()
+    assert len(done) == 6
+    # 6 requests x 2 decode steps each over 2 slots, +1 idle-check step
+    assert steps <= 6 * 3
+    assert sorted(r.rid for r in done) == list(range(6))
+    assert eng.active == [None, None] and not eng.queue
+
+
 def test_engine_with_swa_ring(arch="mixtral-8x7b"):
     cfg, params = _engine(arch, capacity_factor=8.0)
     eng = ServeEngine(cfg, params, n_slots=1, window=16)  # ring < prompt
