@@ -1,0 +1,149 @@
+"""Micro-benchmark: whole-lattice batched transient characterization vs
+the per-point `timing.simulate_read` loop, plus the analytic-vs-autodiff
+Newton parity check.
+
+    PYTHONPATH=src python benchmarks/bench_transient.py [--repeats 1]
+    PYTHONPATH=src python benchmarks/bench_transient.py --smoke   # CI
+
+Writes results/benchmarks/BENCH_transient.json. Each path runs
+`repeats+1` times and the best post-warmup wall time is reported. The
+batched pipeline amortizes one compiled program per cell topology
+(memoized across calls); the scalar loop re-traces a fresh integrator
+per point — which is exactly the cost the pipeline removes, so the warm
+speedup is dominated by (points / topologies) * retrace cost.
+
+Checks recorded (the PR's acceptance bar):
+  * speedup_ge_5x        — batched >= 5x faster (warm) on a >= 64-point
+                           lattice (full mode)
+  * parity_within_1pct   — per-point t_cell within 1% of the scalar
+                           simulate_read reference
+  * newton_parity_1e-6   — analytic-Jacobian Newton trace matches the
+                           jacfwd Newton trace to 1e-6 (float64)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+
+def _lattice(smoke: bool):
+    from repro.core.dse import lattice_configs
+    if smoke:
+        return lattice_configs(cells=("gc2t_nn", "gc2t_np"),
+                               word_sizes=(16, 32), num_words=(16, 32),
+                               wwlls=(False,))
+    return lattice_configs(cells=("gc2t_nn", "gc2t_np", "gc2t_osos"),
+                           word_sizes=(16, 32, 64),
+                           num_words=(16, 32, 64, 128),
+                           wwlls=(False, True))
+
+
+def _newton_parity() -> float:
+    """Max |trace| gap between analytic-stamp Newton and jacfwd Newton."""
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+    from repro.core import timing
+    from repro.core.bank import BankConfig, build_bank
+    from repro.core.spice.transient import Transient
+    with enable_x64():
+        bank = build_bank(BankConfig(32, 32, "gc2t_nn"))
+        ckt, meta = timing.read_netlist(bank)
+        sys = ckt.build()
+        t_an, _ = timing.cell_read_time(bank)
+        t_end = max(timing.T_END_OVER_ANALYTIC * t_an, timing.T_END_MIN_S)
+        waves, v_pre = timing.read_stimulus(
+            bank.cell, bank.cfg.tech, meta["v_sn"],
+            timing.T0_FRACTION * t_end)
+        v0 = jnp.full((sys.n,), v_pre)
+        ref = Transient(sys, newton="jacfwd").run(waves, t_end,
+                                                  n_steps=300, v0=v0)
+        got = Transient(sys, newton="full", tol=1e-9).run(waves, t_end,
+                                                          n_steps=300, v0=v0)
+        return float(jnp.max(jnp.abs(ref["all"] - got["all"])))
+
+
+def collect(repeats: int = 1, smoke: bool = False, n_steps: int = 300
+            ) -> dict:
+    from repro.core import timing
+    from repro.core.bank import build_bank
+    from repro.core.spice.char_batch import characterize
+
+    cfgs = _lattice(smoke)
+
+    def best_of(fn):
+        cold = None
+        walls = []
+        res = None
+        for _ in range(repeats + 1):
+            t0 = time.time()
+            res = fn()
+            walls.append(time.time() - t0)
+            cold = cold if cold is not None else walls[0]
+        return res, min(walls[1:]) if len(walls) > 1 else walls[0], cold
+
+    batch, batch_s, batch_cold = best_of(
+        lambda: characterize(cfgs, n_steps=n_steps))
+    ref, loop_s, loop_cold = best_of(
+        lambda: [timing.simulate_read(build_bank(c), n_steps=n_steps)[0]
+                 for c in cfgs])
+
+    worst = 0.0
+    for ch, t_ref in zip(batch, ref):
+        if np.isinf(t_ref) or np.isinf(ch.t_cell_s):
+            if t_ref != ch.t_cell_s:
+                worst = float("inf")
+            continue
+        worst = max(worst, abs(ch.t_cell_s - t_ref) / t_ref)
+
+    newton_dev = _newton_parity()
+    speedup = loop_s / max(batch_s, 1e-9)
+    n_topologies = len({(c.cell, c.write_vt, c.wwlls) for c in cfgs})
+    return {
+        "n_points": len(cfgs),
+        "n_topologies": n_topologies,
+        "n_steps": n_steps,
+        "loop_wall_s": round(loop_s, 3),
+        "batched_wall_s": round(batch_s, 3),
+        "loop_cold_s": round(loop_cold, 3),
+        "batched_cold_s": round(batch_cold, 3),
+        "speedup": round(speedup, 1),
+        "max_rel_dev_t_cell": float(f"{worst:.3g}"),
+        "newton_trace_dev": float(f"{newton_dev:.3g}"),
+        "checks": {
+            "speedup_ge_5x": speedup >= 5.0,
+            "parity_within_1pct": worst <= 0.01,
+            "newton_parity_1e-6": newton_dev <= 1e-6,
+        },
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small lattice for CI (skips the 64-point bar)")
+    ap.add_argument("--n-steps", type=int, default=300)
+    ap.add_argument("--out", default="results/benchmarks")
+    args = ap.parse_args()
+    res = collect(args.repeats, smoke=args.smoke, n_steps=args.n_steps)
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out, "BENCH_transient.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    print(f"bench_transient: {res['n_points']} points "
+          f"({res['n_topologies']} topologies)  "
+          f"loop {res['loop_wall_s']}s  batched {res['batched_wall_s']}s  "
+          f"speedup {res['speedup']}x  "
+          f"t_cell dev {res['max_rel_dev_t_cell']}  "
+          f"newton dev {res['newton_trace_dev']}")
+    checks = dict(res["checks"])
+    if args.smoke:
+        checks.pop("speedup_ge_5x")   # tiny lattice: timing not meaningful
+    return 0 if all(checks.values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

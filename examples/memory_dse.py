@@ -51,6 +51,21 @@ def main():
         print(f"  {row['demand']:24s}: {row['n_feasible']} feasible banks, "
               f"{macro}")
 
+    print("== 3b. transient calibration of the winning cells ==")
+    # escalate the short-listed cells to the HSPICE-class tier: one
+    # batched Newton program per topology, reporting the GEMTOO gap
+    cal = session.run(SweepQuery(cells=("gc2t_nn", "gc2t_np"),
+                                 word_sizes=(16, 32), num_words=(16, 32),
+                                 fidelity="transient"))
+    c = cal.calibration()
+    if c["mean_rel_dev"] is None:       # no gain-cell point simulated OK
+        print(f"  {c['n_simulated']} points simulated, none usable "
+              f"({c['n_swing_fail']} swing failures)")
+    else:
+        print(f"  {c['n_simulated']} points simulated; analytic-vs-"
+              f"transient dev mean {c['mean_rel_dev']:.1%} / max "
+              f"{c['max_rel_dev']:.1%}")
+
     print("== 4. memory plan per buffer class ==")
     plan = plan_memory(prof, table.points)
     for cls, choice in plan.items():

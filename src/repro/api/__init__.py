@@ -17,6 +17,11 @@ interface (`.as_dict()` / `.write(outdir)`). A `Session` memoizes
 per-config evaluations and whole sweep tables, and `SweepQuery` runs
 through the struct-of-arrays `jax.vmap` evaluator in
 `repro.core.dse_batch` (scalar reference: `repro.core.dse.evaluate`).
+`SweepQuery(fidelity="transient")` escalates to the HSPICE-class tier:
+the batched Newton transient engine (`repro.core.spice.char_batch`)
+simulates every gain-cell read column, one compiled program per cell
+topology, and the returned `CalibratedTable` reports the
+analytic-vs-transient error per point.
 
 The legacy entry points (`GCRAMCompiler`, `dse.sweep`,
 `multibank.build_multibank`) remain as thin deprecated shims over this
@@ -24,12 +29,12 @@ API.
 """
 from repro.api.queries import (CompileQuery, MatchQuery, OptimizeQuery,
                                Query, SweepQuery)
-from repro.api.results import (CompileResult, DesignTable, MatchResult,
-                               OptimizeResult, Result)
+from repro.api.results import (CalibratedTable, CompileResult, DesignTable,
+                               MatchResult, OptimizeResult, Result)
 from repro.api.session import Session
 
 __all__ = [
     "Session", "Query", "CompileQuery", "SweepQuery", "MatchQuery",
     "OptimizeQuery", "Result", "CompileResult", "DesignTable",
-    "MatchResult", "OptimizeResult",
+    "CalibratedTable", "MatchResult", "OptimizeResult",
 ]

@@ -37,13 +37,27 @@ class CompileQuery(Query):
 @dataclass(frozen=True)
 class SweepQuery(Query):
     """Config lattice -> DesignTable, evaluated by the batched (vmapped)
-    struct-of-arrays evaluator (set batched=False for the scalar loop)."""
+    struct-of-arrays evaluator (set batched=False for the scalar loop).
+
+    fidelity picks the model tier:
+      "analytic"  (default) — logical-effort + Elmore algebra, the
+                  GEMTOO-class fast model; returns a DesignTable.
+      "transient" — additionally integrates every gain-cell point's read
+                  column with the batched Newton engine (HSPICE-class,
+                  one compiled program per cell topology) and returns a
+                  CalibratedTable: the analytic DesignTable plus the
+                  per-point simulated sense time and analytic-vs-transient
+                  error. sim_steps/solver parameterize that engine.
+    """
     cells: Tuple[str, ...] = ("gc2t_nn", "gc2t_np", "gc2t_osos")
     word_sizes: Tuple[int, ...] = (16, 32, 64, 128)
     num_words: Tuple[int, ...] = (16, 32, 64, 128)
     write_vts: Tuple[Optional[str], ...] = (None,)
     wwlls: Tuple[bool, ...] = (False, True)
     batched: bool = True
+    fidelity: str = "analytic"
+    sim_steps: int = 300
+    solver: str = "jnp"
 
     def configs(self, tech):
         return lattice_configs(self.cells, self.word_sizes, self.num_words,

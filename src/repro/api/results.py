@@ -62,16 +62,62 @@ class DesignTable(Result):
              if dse.feasible(p, demand, allow_refresh=allow_refresh)],
             self.query)
 
-    def best(self, key: str = "eff_bw_bps", *, minimize=False
+    def best(self, key: str = "eff_bw_bps", *, minimize=None
              ) -> Optional[DesignPoint]:
+        """Best feasible point by `key`. Direction follows the same
+        convention as `pareto()` (dse.PARETO_MAXIMIZE members are
+        maximized, everything else — area, power, delays — minimized);
+        pass minimize=True/False to override."""
         ok = [p for p in self.points if p.swing_ok]
         if not ok:
             return None
+        if minimize is None:
+            minimize = key not in dse.PARETO_MAXIMIZE
         return (min if minimize else max)(ok, key=lambda p: getattr(p, key))
 
     def as_dict(self):
         return {"n_points": len(self.points),
                 "rows": [p.as_dict() for p in self.points]}
+
+
+@dataclass
+class CalibratedTable(DesignTable):
+    """A DesignTable whose gain-cell points also carry a transient
+    (HSPICE-class) characterization of the read column — the result of
+    `SweepQuery(fidelity="transient")`.
+
+    `transient[i]` aligns with `points[i]`: a
+    `repro.core.spice.char_batch.TransientChar` (simulated sense-swing
+    time, analytic estimate, relative deviation) or None for non-gain-cell
+    configs. `calibration()` summarizes the analytic-vs-transient error —
+    the per-lattice view of the paper's GEMTOO-gap claim."""
+    transient: List[Optional[object]] = field(default_factory=list)
+    filename = "calibration.json"
+
+    def calibration(self) -> dict:
+        devs = [c.rel_dev for c in self.transient
+                if c is not None and c.swing_ok]
+        return {
+            "n_points": len(self.points),
+            "n_simulated": sum(c is not None for c in self.transient),
+            "n_swing_fail": sum(c is not None and not c.swing_ok
+                                for c in self.transient),
+            "max_rel_dev": max(devs) if devs else None,
+            "mean_rel_dev": sum(devs) / len(devs) if devs else None,
+        }
+
+    def as_dict(self):
+        rows = []
+        for i, p in enumerate(self.points):
+            # index (not zip) so a mis-sized transient list can never
+            # silently truncate the point rows
+            c = self.transient[i] if i < len(self.transient) else None
+            row = p.as_dict()
+            if c is not None:
+                row["transient"] = c.as_dict()
+            rows.append(row)
+        return {"n_points": len(self.points),
+                "calibration": self.calibration(), "rows": rows}
 
 
 @dataclass

@@ -21,14 +21,15 @@ from typing import Dict, Iterable, List, Optional
 
 from repro.api.queries import (CompileQuery, MatchQuery, OptimizeQuery,
                                Query, SweepQuery)
-from repro.api.results import (CompileResult, DesignTable, MatchResult,
-                               OptimizeResult, Result)
+from repro.api.results import (CalibratedTable, CompileResult, DesignTable,
+                               MatchResult, OptimizeResult, Result)
 from repro.core import compiler as compiler_mod
 from repro.core import dse
 from repro.core import multibank as mb_mod
 from repro.core.bank import BankConfig
 from repro.core.dse import Demand, DesignPoint
 from repro.core.dse_batch import evaluate_batch
+from repro.core.spice import char_batch
 from repro.core.techfile import SYN40, TechFile
 
 
@@ -38,6 +39,10 @@ class Session:
         self._points: Dict[tuple, DesignPoint] = {}
         self._tables: Dict[SweepQuery, DesignTable] = {}
         self._reports: Dict[tuple, CompileResult] = {}
+        # per-config transient characterizations, keyed by
+        # (config key, sim_steps, solver) — shared between overlapping
+        # transient-fidelity sweeps exactly like the analytic points
+        self._tchars: Dict[tuple, object] = {}
 
     # ------------------------------------------------------------------
     def run(self, query: Query) -> Result:
@@ -78,7 +83,26 @@ class Session:
         return self._points[k]
 
     def sweep(self, query: SweepQuery = SweepQuery()) -> DesignTable:
-        """Evaluate the config lattice; batched via jax.vmap by default."""
+        """Evaluate the config lattice; batched via jax.vmap by default.
+
+        fidelity="analytic" returns a DesignTable; fidelity="transient"
+        additionally runs the topology-grouped batched transient engine
+        over every gain-cell point and returns a CalibratedTable."""
+        if query.fidelity not in ("analytic", "transient"):
+            raise ValueError(f"unknown SweepQuery fidelity "
+                             f"{query.fidelity!r} (analytic | transient)")
+        if query.solver not in ("jnp", "pallas"):
+            raise ValueError(f"unknown SweepQuery solver {query.solver!r} "
+                             "(jnp | pallas)")
+        if query.fidelity == "transient" and query.solver == "pallas":
+            # the kernel computes in f32; fine for TPU screening sweeps,
+            # but it is NOT the float64 accuracy anchor
+            import warnings
+            warnings.warn(
+                "SweepQuery(fidelity='transient', solver='pallas') solves "
+                "in float32 inside the Pallas kernel; calibration numbers "
+                "are screening-grade only (use solver='jnp' for the f64 "
+                "anchor)", stacklevel=2)
         if query in self._tables:
             return self._tables[query]
         cfgs = query.configs(self.tech)
@@ -93,7 +117,24 @@ class Session:
                 else [dse.evaluate(c) for c in missing]
             for c, p in zip(missing, pts):
                 self._points[self._key(c)] = p
-        table = DesignTable([self._points[k] for k in keys], query)
+        points = [self._points[k] for k in keys]
+        if query.fidelity == "transient":
+            tkeys = [(k, query.sim_steps, query.solver) for k in keys]
+            todo, seen = [], set()
+            for c, tk in zip(cfgs, tkeys):
+                if tk not in self._tchars and tk not in seen:
+                    todo.append(c)
+                    seen.add(tk)
+            if todo:
+                chars = char_batch.characterize(
+                    todo, n_steps=query.sim_steps, solver=query.solver)
+                for c, ch in zip(todo, chars):
+                    self._tchars[(self._key(c), query.sim_steps,
+                                  query.solver)] = ch
+            table = CalibratedTable(points, query,
+                                    [self._tchars[tk] for tk in tkeys])
+        else:
+            table = DesignTable(points, query)
         self._tables[query] = table
         return table
 
@@ -104,6 +145,10 @@ class Session:
         an interleaved multibank macro (paper: multi-banked GCRAM serves
         the aggregate L2 request stream no single bank can)."""
         demands = list(demands)
+        dkeys = [f"{d.level}:{d.name}" for d in demands]
+        if len(set(dkeys)) != len(dkeys):
+            raise ValueError(f"duplicate demand keys in match: {dkeys} "
+                             "(grid/banks_needed are keyed by level:name)")
         table = self.sweep(sweep)
         grid = dse.shmoo(table.points, demands, allow_refresh=allow_refresh)
         fastest = table.best("f_max_hz")

@@ -38,12 +38,25 @@ from repro.core.power import PERIPH_LEAK_W_PER_UM2
 from repro.core.spice import devices as dv
 
 
-def evaluate_batch(cfgs: Sequence[BankConfig]) -> List[DesignPoint]:
-    """Evaluate every config; returns DesignPoints in input order."""
+def topology_key(cfg: BankConfig) -> tuple:
+    """Cell-topology grouping key: configs sharing it have identical cell
+    electricals and (for the transient pipeline) identical critical-path
+    netlist STRUCTURE — only wire/structural values differ. Shared with
+    `repro.core.spice.char_batch`."""
+    return (cfg.cell, cfg.write_vt, cfg.wwlls, cfg.wwl_boost, id(cfg.tech))
+
+
+def group_by_topology(cfgs: Sequence[BankConfig]) -> Dict[tuple, List[int]]:
+    """Indices of `cfgs` grouped by topology_key, preserving order."""
     groups: Dict[tuple, List[int]] = {}
     for i, cfg in enumerate(cfgs):
-        key = (cfg.cell, cfg.write_vt, cfg.wwlls, cfg.wwl_boost, id(cfg.tech))
-        groups.setdefault(key, []).append(i)
+        groups.setdefault(topology_key(cfg), []).append(i)
+    return groups
+
+
+def evaluate_batch(cfgs: Sequence[BankConfig]) -> List[DesignPoint]:
+    """Evaluate every config; returns DesignPoints in input order."""
+    groups = group_by_topology(cfgs)
     out: List[DesignPoint] = [None] * len(cfgs)
     for idx in groups.values():
         for i, p in zip(idx, _evaluate_group([cfgs[i] for i in idx])):

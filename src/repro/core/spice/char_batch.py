@@ -1,0 +1,220 @@
+"""Topology-grouped batched transient characterization of the read path.
+
+`timing.simulate_read` is the scalar (HSPICE-class) reference: per design
+point it rebuilds the RBL-column netlist, re-jits a fresh Newton
+integrator and extracts the sense-swing crossing on host — O(lattice)
+compilations and O(lattice * n_steps * newton) small dense solves issued
+one program at a time. This module characterizes a whole design lattice
+in a handful of compiled programs:
+
+  1. group configs by cell topology (`dse_batch.topology_key`): within a
+     group the critical-path netlist STRUCTURE (nodes, devices, sources)
+     is identical — only the wire parasitics, stop time and wave timings
+     differ with the array geometry;
+  2. build ONE parametric netlist per group and lift the per-point
+     structural quantities into parameter arrays:
+       * the linear elements assemble via unit-value incidence stamps
+         (`Circuit.build_stamps`): G_b = src_G + g_b @ R_stamps and
+         C_b = c_b @ C_stamps, where g_b/c_b (B, n_elem) hold each
+         point's bitline-ladder segment conductances, wire/SA/junction
+         capacitances — an einsum instead of B python assemblies;
+       * per-point stop times t_end (from the analytic swing estimate)
+         and the precharge/wordline wave timings enter as (B, ...) arrays;
+  3. integrate the whole group in a single `Transient.run_lattice`
+     program — `jax.vmap` over (t_end, waves, G, C) around the shared
+     analytic-Jacobian Newton stepper, whose linear solves route through
+     `jnp.linalg.solve` or the Pallas `batched_solve` kernel
+     (solver="pallas"; the vmap batch folds into the kernel grid);
+  4. extract the sense-swing threshold crossing vectorized on-device
+     (`transient.crossing_time`), interpolated between bracketing steps
+     exactly like the scalar reference.
+
+Compiled programs are memoized per (topology, n_seg, n_steps, solver), so
+repeated characterizations of overlapping lattices (Session sweeps,
+benchmarks) pay tracing once.
+
+Newton Jacobian stamp math (the per-iteration hot path): the MNA Newton
+system is J dv = F(v) with J = C/h + G + dI/dv + gmin. dI/dv is built
+from per-device 3x3 analytic stamps — `channel_current_grads` gives
+(di/dvg, di/dva, di/dvb) of the EKV channel current in closed form, one
+vectorized pass over the device parameter arrays, and
+`MNASystem.device_jacobian` scatter-adds the nine KCL entries per device
+into the dense matrix. See those docstrings for the row/column algebra.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.core import timing as timing_mod
+from repro.core.bank import BankConfig, build_bank
+from repro.core.dse_batch import group_by_topology, topology_key
+from repro.core.spice.transient import Transient, crossing_time
+
+_PIPE_CACHE_MAX = 32     # compiled-pipeline entries kept (FIFO eviction)
+
+
+@dataclass
+class TransientChar:
+    """Transient read characterization of one design point."""
+    cfg: BankConfig
+    t_cell_s: float            # simulated sense-swing time (inf: no cross)
+    t_cell_analytic_s: float   # analytic estimate (timing.cell_read_time)
+    rel_dev: float             # |analytic - sim| / sim (the GEMTOO gap)
+    swing_ok: bool             # trace reached the sense target
+    t_end_s: float
+    n_steps: int
+
+    def as_dict(self) -> dict:
+        return {"cell": self.cfg.cell, "word_size": self.cfg.word_size,
+                "num_words": self.cfg.num_words, "wwlls": self.cfg.wwlls,
+                "write_vt": self.cfg.write_vt,
+                "t_cell_sim_s": self.t_cell_s,
+                "t_cell_analytic_s": self.t_cell_analytic_s,
+                "rel_dev": self.rel_dev, "swing_ok": self.swing_ok,
+                "t_end_s": self.t_end_s, "n_steps": self.n_steps}
+
+
+# (topology_key, n_seg, n_steps, solver) -> (system, Transient, stamps)
+_PIPE_CACHE: Dict[tuple, tuple] = {}
+
+
+def _pipeline(bank0, key: tuple):
+    """Template netlist + jitted Transient + incidence stamps for one
+    topology group (memoized: repeat characterizations re-trace nothing).
+
+    The key embeds id(tech) (via topology_key), so each entry also PINS
+    the TechFile object: without the strong reference, a collected tech's
+    id could be reused by a different TechFile and silently hit the stale
+    template."""
+    hit = _PIPE_CACHE.get(key)
+    if hit is not None:
+        return hit[:-1]
+    n_seg, n_steps, solver = key[-3:]
+    ckt, meta = timing_mod.read_netlist(bank0, n_seg=n_seg)
+    res_stamps, cap_stamps, src_G = ckt.build_stamps()
+    system = ckt.build()
+    tr = Transient(system, solver=solver)
+    out = (system, tr, res_stamps, cap_stamps, src_G, meta)
+    while len(_PIPE_CACHE) >= _PIPE_CACHE_MAX:   # bound pinned programs
+        del _PIPE_CACHE[next(iter(_PIPE_CACHE))]
+    _PIPE_CACHE[key] = out + (bank0.cfg.tech,)
+    return out
+
+
+def _characterize_group(cfgs: List[BankConfig], banks, *, n_seg: int,
+                        n_steps: int, solver: str) -> List[TransientChar]:
+    bank0 = banks[0]
+    tech = cfgs[0].tech
+    cell = bank0.cell
+    key = topology_key(cfgs[0]) + (n_seg, n_steps, solver)
+    system, tr, res_stamps, cap_stamps, src_G, meta = _pipeline(bank0, key)
+
+    # -- lift structural values into per-point parameter arrays. The
+    # per-point netlist builder is the single source of truth for element
+    # VALUES (ladder R/C, device caps, SA load); structure is asserted
+    # identical to the template.
+    g_vals = np.zeros((len(banks), len(res_stamps)))
+    c_vals = np.zeros((len(banks), len(cap_stamps)))
+    t_an = np.zeros((len(banks),))
+    for p, bank in enumerate(banks):
+        ckt_p, _ = timing_mod.read_netlist(bank, n_seg=n_seg)
+        assert len(ckt_p.names) == len(system.names) and \
+            len(ckt_p.res) == len(res_stamps) and \
+            len(ckt_p.caps) == len(cap_stamps), "topology group mismatch"
+        g_vals[p] = [g for _, _, g in ckt_p.res]
+        c_vals[p] = [c for _, _, c in ckt_p.caps]
+        t_an[p] = timing_mod.cell_read_time(bank)[0]
+
+    # float64 assembly, float64 all the way down (the group runs under
+    # enable_x64 — see characterize; no f32 cast happens or should)
+    G_b = src_G[None] + np.einsum("br,rij->bij", g_vals, res_stamps)
+    C_b = np.einsum("bc,cij->bij", c_vals, cap_stamps)
+
+    # -- per-point stop time + waves, from the SAME stimulus recipe as
+    # the scalar simulate_read (timing.read_stimulus), edge-padded to the
+    # longest waveform exactly like Transient.pack_waves
+    t_end = np.maximum(timing_mod.T_END_OVER_ANALYTIC * t_an,
+                       timing_mod.T_END_MIN_S)
+    t0 = timing_mod.T0_FRACTION * t_end
+    B = len(banks)
+    wt = wv = None
+    v_pre = 0.0
+    for p in range(B):
+        waves_p, v_pre = timing_mod.read_stimulus(cell, tech,
+                                                  meta["v_sn"], t0[p])
+        if wt is None:   # buffer dims derived from the stimulus itself
+            k = max(len(t) for t, _ in waves_p)
+            wt = np.zeros((B, len(waves_p), k))
+            wv = np.zeros((B, len(waves_p), k))
+        for w, (t, v) in enumerate(waves_p):
+            wt[p, w] = t + [t[-1]] * (k - len(t))
+            wv[p, w] = v + [v[-1]] * (k - len(v))
+
+    # pad the batch to a power-of-two bucket (edge-repeat) so the jitted
+    # lattice program is reused across characterizations of different
+    # sizes — vmap shapes are static, and session sweeps routinely hand
+    # this pipeline varying-size "missing" subsets
+    Bp = max(4, 1 << (B - 1).bit_length())
+    if Bp > B:
+        pad = lambda a: np.concatenate(
+            [a, np.repeat(a[-1:], Bp - B, axis=0)], axis=0)
+        G_b, C_b, wt, wv = map(pad, (G_b, C_b, wt, np.asarray(wv)))
+        t_end_p = pad(t_end)
+    else:
+        t_end_p = t_end
+
+    res = tr.run_lattice(wt, wv, t_end_p, n_steps,
+                         over_batches={"G": G_b, "C": C_b},
+                         v0=jnp.full((system.n,), v_pre))
+
+    swing = tech.v_sense_se
+    target = v_pre + (swing if cell.predischarge else -swing)
+    tc, valid = crossing_time(res["t"], res["rbl_near"], target,
+                              rising=cell.predischarge)
+    tc = np.asarray(tc)[:B]
+    valid = np.asarray(valid)[:B]
+    t_cell = np.where(valid, tc - t0, np.inf)
+
+    out = []
+    for p, cfg in enumerate(cfgs):
+        sim = float(t_cell[p])
+        dev = abs(t_an[p] - sim) / sim if np.isfinite(sim) and sim > 0 \
+            else float("inf")
+        out.append(TransientChar(cfg, sim, float(t_an[p]), float(dev),
+                                 bool(valid[p]), float(t_end[p]), n_steps))
+    return out
+
+
+def characterize(cfgs: Sequence[BankConfig], *, n_steps: int = 300,
+                 solver: str = "jnp", n_seg: int = 8
+                 ) -> List[Optional[TransientChar]]:
+    """Batched transient read characterization of a config lattice.
+
+    Returns one TransientChar per config, in input order; non-gain-cell
+    configs (no single-ended read column to simulate) get None. Matches
+    the scalar `timing.simulate_read` per point — same netlist builder,
+    same integrator, same interpolated crossing extraction — but runs one
+    compiled program per cell topology instead of one per point.
+    """
+    cfgs = list(cfgs)
+    out: List[Optional[TransientChar]] = [None] * len(cfgs)
+    # float64 throughout (see timing.simulate_read: cond(J) ~ 1e6 makes
+    # f32 Newton noise dominate the traces). Note solver="pallas" computes
+    # in f32 inside the kernel — fine for DSE screening, but the "jnp"
+    # solver is the accuracy anchor.
+    with enable_x64():
+        for idx in group_by_topology(cfgs).values():
+            group = [cfgs[i] for i in idx]
+            banks = [build_bank(c) for c in group]
+            if not banks[0].is_gc:
+                continue
+            chars = _characterize_group(group, banks, n_seg=n_seg,
+                                        n_steps=n_steps, solver=solver)
+            for i, ch in zip(idx, chars):
+                out[i] = ch
+    return out

@@ -43,6 +43,56 @@ def channel_current_raw(pol, vt0, n, kp, lam, w, l, vg, va, vb):
     return w * jnp.where(va >= vb, mag(va, vb), -mag(vb, va))
 
 
+def channel_current_grads(pol, vt0, n, kp, lam, w, l, vg, va, vb):
+    """Closed-form (di/dvg, di/dva, di/dvb) of `channel_current_raw`,
+    vectorized over device arrays — one pass computes every device's 3x3
+    conductance stamp, replacing n forward-mode Jacobian passes per
+    Newton iteration.
+
+    With L2(x) = softplus(x)^2 and L2'(x) = 2 softplus(x) sigmoid(x):
+
+        m(v_hi, v_lo) = I_S [L2(a) - L2(b)] (1 + lam vds)
+        a = (vgs_on - vt0) / (2 n phi_t)
+        b = (vgs_on - vt0 - n vds) / (2 n phi_t)
+
+    so each partial is the chain rule through (a, b, vds) with the branch
+    (va >= vb picks which terminal is the source) selected exactly like
+    the forward evaluation — matching jacfwd of channel_current_raw to
+    float roundoff."""
+    den = 2.0 * n * PHI_T
+    i_s = 2.0 * n * kp * (1.0 / jnp.maximum(l, 1e-3)) * PHI_T ** 2
+    is_n = pol > 0
+
+    def mag_grads(v_hi, v_lo):
+        vds = v_hi - v_lo
+        vgs_on = jnp.where(is_n, vg - v_lo, v_hi - vg)
+        a_ = (vgs_on - vt0) / den
+        b_ = (vgs_on - vt0 - n * vds) / den
+        sp_a, sp_b = jax.nn.softplus(a_), jax.nn.softplus(b_)
+        dl2a = 2.0 * sp_a * jax.nn.sigmoid(a_)
+        dl2b = 2.0 * sp_b * jax.nn.sigmoid(b_)
+        core = sp_a ** 2 - sp_b ** 2
+        lam_f = 1.0 + lam * vds
+        # d(vgs_on)/d{vg, v_hi, v_lo}
+        dvgs_dvg = jnp.where(is_n, 1.0, -1.0)
+        dvgs_dhi = jnp.where(is_n, 0.0, 1.0)
+        dvgs_dlo = jnp.where(is_n, -1.0, 0.0)
+        dm_dvg = i_s * (dl2a - dl2b) * dvgs_dvg / den * lam_f
+        dm_dhi = i_s * ((dl2a * dvgs_dhi - dl2b * (dvgs_dhi - n)) / den
+                        * lam_f + core * lam)
+        dm_dlo = i_s * ((dl2a * dvgs_dlo - dl2b * (dvgs_dlo + n)) / den
+                        * lam_f - core * lam)
+        return dm_dvg, dm_dhi, dm_dlo
+
+    f_dvg, f_dhi, f_dlo = mag_grads(va, vb)     # forward: hi=va, lo=vb
+    r_dvg, r_dhi, r_dlo = mag_grads(vb, va)     # reverse: hi=vb, lo=va
+    fwd = va >= vb
+    di_dvg = w * jnp.where(fwd, f_dvg, -r_dvg)
+    di_dva = w * jnp.where(fwd, f_dhi, -r_dlo)
+    di_dvb = w * jnp.where(fwd, f_dlo, -r_dhi)
+    return di_dvg, di_dva, di_dvb
+
+
 @dataclass
 class Circuit:
     """Builder. Node 0 is ground."""
@@ -53,10 +103,16 @@ class Circuit:
     vsrcs: List[tuple] = field(default_factory=list)  # (node, wave_idx)
     probes: Dict[str, int] = field(default_factory=dict)
 
+    def __post_init__(self):
+        self._index = {n: i for i, n in enumerate(self.names)}
+
     def node(self, name: str) -> int:
-        if name not in self.names:
+        i = self._index.get(name)
+        if i is None:
+            i = len(self.names)
             self.names.append(name)
-        return self.names.index(name)
+            self._index[name] = i
+        return i
 
     def r(self, a, b, ohms):
         self.res.append((self.node(a), self.node(b), 1.0 / ohms))
@@ -125,6 +181,41 @@ class Circuit:
                          src_node, src_wave, n, dict(self.probes),
                          list(self.names))
 
+    def build_stamps(self):
+        """Unit-value incidence stamps of the LINEAR elements, so a whole
+        lattice of structurally-identical circuits assembles as one einsum:
+
+            G(g) = src_G + einsum('(b)r,rij->(b)ij', g, res_stamps)
+            C(c) =         einsum('(b)c,cij->(b)ij', c, cap_stamps)
+
+        where g/c are the per-point element-value vectors (in list order).
+        Returns (res_stamps (nR,n,n), cap_stamps (nC,n,n), src_G (n,n)),
+        float64 numpy — the einsum reproduces the scalar `build()`
+        accumulation to f64 roundoff, and the batched characterization
+        pipeline keeps the matrices in f64 end-to-end (it runs under
+        enable_x64; see char_batch)."""
+        n = len(self.names) - 1
+
+        def stamp(a, b):
+            s = np.zeros((n, n))
+            if a > 0:
+                s[a - 1, a - 1] += 1.0
+            if b > 0:
+                s[b - 1, b - 1] += 1.0
+            if a > 0 and b > 0:
+                s[a - 1, b - 1] -= 1.0
+                s[b - 1, a - 1] -= 1.0
+            return s
+
+        res_stamps = np.stack([stamp(a, b) for a, b, _ in self.res]) \
+            if self.res else np.zeros((0, n, n))
+        cap_stamps = np.stack([stamp(a, b) for a, b, _ in self.caps]) \
+            if self.caps else np.zeros((0, n, n))
+        src_G = np.zeros((n, n))
+        for nd, _ in self.vsrcs:
+            src_G[nd - 1, nd - 1] += G_BIG
+        return res_stamps, cap_stamps, src_G
+
 
 @dataclass
 class MNASystem:
@@ -140,10 +231,16 @@ class MNASystem:
 
     def with_params(self, **over):
         """Functional override of device parameter arrays (vt0, w, ...) —
-        the hook for DSE batching/gradients."""
+        the hook for DSE batching/gradients. The special keys "G" and "C"
+        override the LINEAR matrices, which is how the batched
+        characterization pipeline threads per-design-point wire parasitics
+        (bitline ladder RC, SA load, ...) through one compiled program."""
+        over = dict(over)
+        G = jnp.asarray(over.pop("G")) if "G" in over else self.G
+        C = jnp.asarray(over.pop("C")) if "C" in over else self.C
         dev = dict(self.dev)
         dev.update({k: jnp.asarray(v) for k, v in over.items()})
-        return MNASystem(self.G, self.C, dev, self.didx, self.src_node,
+        return MNASystem(G, C, dev, self.didx, self.src_node,
                          self.src_wave, self.n, self.probes, self.names)
 
     def _v_of(self, v, node_idx):
@@ -180,6 +277,55 @@ class MNASystem:
         if len(self.src_node) == 0:
             return out
         return out.at[self.src_node].add(G_BIG * wave_v[self.src_wave])
+
+    def device_jacobian(self, v):
+        """d(device_currents)/dv as a dense (n, n) matrix, assembled from
+        per-device 3x3 analytic stamps in ONE vectorized pass.
+
+        For each device, with channel partials (di/dvg, di/dva, di/dvb)
+        from `channel_current_grads` and gate-leak conductance
+        gg = ig*w/1.1 (i_g = gg*(vg - (va+vb)/2)), the KCL rows stamp as
+
+            row a (+i_ab - i_g/2):  [di_dvg - gg/2, di_dva + gg/4, di_dvb + gg/4]
+            row b (-i_ab - i_g/2):  [-di_dvg - gg/2, -di_dva + gg/4, -di_dvb + gg/4]
+            row g (+i_g):           [gg, -gg/2, -gg/2]
+
+        (columns ordered g, a, b), scatter-added with ground (-1) rows and
+        columns dropped."""
+        if self.dev["pol"].shape[0] == 0:
+            return jnp.zeros((self.n, self.n))
+        vg = self._v_of(v, self.didx["g"])
+        va = self._v_of(v, self.didx["a"])
+        vb = self._v_of(v, self.didx["b"])
+        di_dvg, di_dva, di_dvb = channel_current_grads(
+            self.dev["pol"], self.dev["vt0"], self.dev["n"], self.dev["kp"],
+            self.dev["lam"], self.dev["w"], self.dev["l"], vg, va, vb)
+        gg = self.dev["ig"] * self.dev["w"] / 1.1
+        na, nb, ng = self.didx["a"], self.didx["b"], self.didx["g"]
+        entries = (
+            (na, ng, di_dvg - 0.5 * gg),
+            (na, na, di_dva + 0.25 * gg),
+            (na, nb, di_dvb + 0.25 * gg),
+            (nb, ng, -di_dvg - 0.5 * gg),
+            (nb, na, -di_dva + 0.25 * gg),
+            (nb, nb, -di_dvb + 0.25 * gg),
+            (ng, ng, gg + jnp.zeros_like(di_dvg)),
+            (ng, na, -0.5 * gg + jnp.zeros_like(di_dvg)),
+            (ng, nb, -0.5 * gg + jnp.zeros_like(di_dvg)),
+        )
+        rows = jnp.concatenate([jnp.asarray(r) for r, _, _ in entries])
+        cols = jnp.concatenate([jnp.asarray(c) for _, c, _ in entries])
+        vals = jnp.concatenate([x for _, _, x in entries])
+        ok = (rows >= 0) & (cols >= 0)
+        flat = jnp.where(ok, rows * self.n + cols, 0)
+        J = jnp.zeros((self.n * self.n,)).at[flat].add(
+            jnp.where(ok, vals, 0.0))
+        return J.reshape(self.n, self.n)
+
+    def jacobian(self, v, h):
+        """Analytic MNA Newton Jacobian J = C/h + G + dI/dv + gmin."""
+        return (self.C / h + self.G + self.device_jacobian(v)
+                + G_MIN * jnp.eye(self.n))
 
     def residual(self, v, v_prev, h, wave_v):
         """Backward-Euler KCL residual (n,)."""

@@ -5,6 +5,14 @@ The Newton linear solve goes through repro.kernels.batched_solve.ops
 (Pallas TPU kernel; interpret mode on CPU) or jnp.linalg.solve. The MNA
 Jacobian J = C/h + G + dI/dv has gmin + C/h diagonal dominance, so
 unpivoted elimination is stable (DESIGN.md §6).
+
+Newton uses the ANALYTIC Jacobian (`MNASystem.jacobian`: per-device 3x3
+conductance stamps assembled in one vectorized pass) instead of n
+forward-mode `jacfwd` passes, and exits early once the update norm drops
+under `tol` (a `lax.while_loop`; under vmap JAX's batching rule freezes
+converged lanes, so per-point results match the scalar path). The
+`jacfwd` mode keeps the autodiff Jacobian as the parity reference — and
+as the reverse-differentiable path, since while_loop has no VJP.
 """
 from __future__ import annotations
 
@@ -14,6 +22,7 @@ import jax.numpy as jnp
 from repro.core.spice.mna import MNASystem
 
 NEWTON_ITERS = 6
+NEWTON_TOL = 1e-6       # volts; max|dv| under this ends the Newton loop
 
 
 def wave_value(times, values, t):
@@ -21,21 +30,61 @@ def wave_value(times, values, t):
     return jnp.interp(t, times, values)
 
 
-def make_stepper(system: MNASystem, solver_name: str = "jnp",
-                 newton: str = "full", iters: int = NEWTON_ITERS):
-    """Returns step(v, t, h, wave_t, wave_v, dev_over) -> v_next.
-    Pure function of arrays: vmap/grad-safe over dev_over batches.
+def crossing_time(t, v, target, rising: bool):
+    """First threshold crossing of a trace, linearly interpolated between
+    the bracketing time steps. t, v: (..., T) — vectorized over leading
+    batch dims, so a whole lattice extracts on-device in one pass.
 
-    newton="full":     re-linearize + solve every iteration (HSPICE-like)
-    newton="modified": linearize ONCE per timestep, invert, iterate with
-                       mat-vecs — trades 1 O(n^3) factorization + k O(n^2)
-                       applies against k factorization (§Perf GCRAM-sim
-                       hillclimb; valid because BE steps start near the
-                       solution so the Jacobian barely moves within a step)
+    Returns (t_cross, valid): t_cross is +inf where the trace never
+    reaches the target (valid False), matching the scalar simulate_read
+    convention (final sample must be past the target and the crossing
+    must not be at step 0)."""
+    t = jnp.asarray(t)
+    v = jnp.asarray(v)
+    mask = (v >= target) if rising else (v <= target)
+    ok = mask[..., -1]
+    hit = jnp.argmax(mask, axis=-1)
+    pos = jnp.maximum(hit, 1)[..., None]
+    v1 = jnp.take_along_axis(v, pos, axis=-1)[..., 0]
+    v0 = jnp.take_along_axis(v, pos - 1, axis=-1)[..., 0]
+    t1 = jnp.take_along_axis(jnp.broadcast_to(t, v.shape), pos,
+                             axis=-1)[..., 0]
+    t0 = jnp.take_along_axis(jnp.broadcast_to(t, v.shape), pos - 1,
+                             axis=-1)[..., 0]
+    dv = v1 - v0
+    frac = jnp.clip((target - v0) / jnp.where(dv == 0.0, 1.0, dv), 0.0, 1.0)
+    valid = ok & (hit > 0)
+    return jnp.where(valid, t0 + frac * (t1 - t0), jnp.inf), valid
+
+
+def make_stepper(system: MNASystem, solver_name: str = "jnp",
+                 newton: str = "full", iters: int = NEWTON_ITERS,
+                 tol: float = NEWTON_TOL, with_aux: bool = False):
+    """Returns step(v, t, h, wave_t, wave_v, dev_over) -> v_next.
+    Pure function of arrays: vmap-safe over dev_over batches (which may
+    also carry per-point "G"/"C" matrix overrides).
+
+    newton="full":     analytic-Jacobian Newton (re-stamp + solve every
+                       iteration, HSPICE-like) with tolerance early-exit:
+                       stops as soon as max|dv| < tol instead of burning
+                       the fixed `iters` budget (BE steps start near the
+                       solution, so 2-3 iterations usually suffice)
+    newton="jacfwd":   the legacy fixed-iteration loop with the autodiff
+                       (jax.jacfwd) Jacobian — the reference the analytic
+                       stamps are tested against, and the grad-safe path
+    newton="modified": linearize ONCE per timestep (analytic stamps),
+                       invert, iterate with mat-vecs — trades 1 O(n^3)
+                       factorization + k O(n^2) applies against k
+                       factorizations (§Perf GCRAM-sim hillclimb)
+
+    with_aux=True (full mode only) makes step return (v_next, n_iters)
+    so tests can observe the early exit.
     """
+    if with_aux and newton != "full":
+        raise ValueError("with_aux is only supported for newton='full'")
     if solver_name == "pallas":
         from repro.kernels.batched_solve import ops as solve_ops
-        solver = solve_ops.solve1
+        solver = solve_ops.solve
     else:
         solver = lambda J, r: jnp.linalg.solve(J, r)
 
@@ -48,7 +97,7 @@ def make_stepper(system: MNASystem, solver_name: str = "jnp",
             return sys.residual(vv, v, h, wv)
 
         if newton == "modified":
-            J = jax.jacfwd(res)(v)
+            J = sys.jacobian(v, h)
             Jinv = jnp.linalg.inv(J)
 
             def it(vv, _):
@@ -57,12 +106,30 @@ def make_stepper(system: MNASystem, solver_name: str = "jnp",
             v2, _ = jax.lax.scan(it, v, None, length=iters)
             return v2
 
-        def it(vv, _):
-            r = res(vv)
-            J = jax.jacfwd(res)(vv)
-            return vv - solver(J, r), None
+        if newton == "jacfwd":
+            def it(vv, _):
+                r = res(vv)
+                J = jax.jacfwd(res)(vv)
+                return vv - solver(J, r), None
 
-        v2, _ = jax.lax.scan(it, v, None, length=iters)
+            v2, _ = jax.lax.scan(it, v, None, length=iters)
+            return v2
+
+        # newton == "full": analytic stamps + early exit
+        def cond(state):
+            _, done, i = state
+            return (i < iters) & jnp.logical_not(done)
+
+        def body(state):
+            vv, _, i = state
+            dv = solver(sys.jacobian(vv, h), res(vv))
+            done = jnp.max(jnp.abs(dv)) < tol
+            return vv - dv, done, i + 1
+
+        v2, _, n_it = jax.lax.while_loop(
+            cond, body, (v, jnp.asarray(False), jnp.asarray(0)))
+        if with_aux:
+            return v2, n_it
         return v2
 
     return step
@@ -72,11 +139,14 @@ class Transient:
     """run(waves, t_end, n_steps) -> probe traces. jit cached per n_steps."""
 
     def __init__(self, system: MNASystem, solver: str = "jnp",
-                 newton: str = "full", iters: int = NEWTON_ITERS):
+                 newton: str = "full", iters: int = NEWTON_ITERS,
+                 tol: float = NEWTON_TOL):
         self.system = system
         self.solver = solver
-        self._step = make_stepper(system, solver, newton=newton, iters=iters)
+        self._step = make_stepper(system, solver, newton=newton,
+                                  iters=iters, tol=tol)
         self._jit_cache = {}
+        self._wave_cache = {}
 
     def _fn(self, n_steps: int, keys: tuple):
         if (n_steps, keys) not in self._jit_cache:
@@ -97,14 +167,26 @@ class Transient:
         return self._jit_cache[(n_steps, keys)]
 
     def pack_waves(self, waves):
+        """Pad + stack piecewise-linear waveforms; memoized by content (and
+        the ambient float width) so repeated run()/run_batch() calls with
+        identical waveforms skip the re-padding and host->device
+        transfer."""
+        dtype = jnp.result_type(float)
+        key = (dtype.name,) + tuple(
+            (tuple(float(x) for x in t), tuple(float(x) for x in v))
+            for t, v in waves)
+        hit = self._wave_cache.get(key)
+        if hit is not None:
+            return hit
         k = max(len(t) for t, _ in waves)
 
         def pad(a):
-            a = jnp.asarray(a, jnp.float32)
+            a = jnp.asarray(a, dtype)
             return jnp.pad(a, (0, k - len(a)), mode="edge")
 
         wt = jnp.stack([pad(t) for t, _ in waves])
         wv = jnp.stack([pad(v) for _, v in waves])
+        self._wave_cache[key] = (wt, wv)
         return wt, wv
 
     def run(self, waves, t_end, n_steps=400, v0=None, dev_over=None):
@@ -114,7 +196,8 @@ class Transient:
         dev_over = dev_over or {}
         keys = tuple(sorted(dev_over))
         vals = tuple(jnp.asarray(dev_over[k]) for k in keys)
-        vs = self._fn(int(n_steps), keys)(jnp.float32(t_end), wt, wv, v0, vals)
+        t_end = jnp.asarray(t_end, jnp.result_type(float))
+        vs = self._fn(int(n_steps), keys)(t_end, wt, wv, v0, vals)
         out = {"all": vs,
                "t": (jnp.arange(n_steps) + 1) * (t_end / n_steps)}
         for label, node in self.system.probes.items():
@@ -129,11 +212,39 @@ class Transient:
             v0 = jnp.zeros((self.system.n,))
         keys = tuple(sorted(dev_batches))
         vals = tuple(jnp.asarray(dev_batches[k]) for k in keys)
+        t_end = jnp.asarray(t_end, jnp.result_type(float))
         fn = self._fn(int(n_steps), keys)
-        bfn = jax.vmap(lambda dv: fn(jnp.float32(t_end), wt, wv, v0, dv))
+        bfn = jax.vmap(lambda dv: fn(t_end, wt, wv, v0, dv))
         vs = bfn(vals)  # (B, n_steps, n)
         out = {"all": vs,
                "t": (jnp.arange(n_steps) + 1) * (t_end / n_steps)}
+        for label, node in self.system.probes.items():
+            out[label] = vs[:, :, node - 1]
+        return out
+
+    def run_lattice(self, wt, wv, t_end, n_steps, over_batches=None,
+                    v0=None):
+        """Whole-lattice transient: vmap over per-point waveforms AND stop
+        times AND parameter overrides in one compiled program.
+
+        wt/wv: (B, n_waves, k) packed waveforms; t_end: (B,) stop times
+        (h varies per point); over_batches: {param: (B, ...)}, which may
+        include "G"/"C" (B, n, n) linear-matrix overrides carrying the
+        per-point wire parasitics. v0: (n,) shared initial state.
+        Returns {"all": (B, T, n), "t": (B, T), probes: (B, T)}.
+        """
+        if v0 is None:
+            v0 = jnp.zeros((self.system.n,))
+        over_batches = over_batches or {}
+        keys = tuple(sorted(over_batches))
+        vals = tuple(jnp.asarray(over_batches[k]) for k in keys)
+        t_end = jnp.asarray(t_end, jnp.result_type(float))
+        fn = self._fn(int(n_steps), keys)
+        bfn = jax.vmap(lambda te, wtt, wvv, dv: fn(te, wtt, wvv, v0, dv))
+        vs = bfn(t_end, jnp.asarray(wt), jnp.asarray(wv), vals)
+        out = {"all": vs,
+               "t": (jnp.arange(n_steps) + 1)[None, :]
+               * (t_end[:, None] / n_steps)}
         for label, node in self.system.probes.items():
             out[label] = vs[:, :, node - 1]
         return out

@@ -12,7 +12,10 @@ Read critical path (paper §V-C: read limits frequency):
 The transient path builds the RBL column netlist (driver, wordline RC
 ladder, active cell, leaker cells lumped, SA load) and integrates it with
 the batched Newton engine; tests assert analytic-vs-transient deviation
-<= 15% X claim (the GEMTOO gap the paper cites).
+<= 15% X claim (the GEMTOO gap the paper cites). `simulate_read` is the
+SCALAR reference; `repro.core.spice.char_batch.characterize` runs the
+same netlist/integrator/extraction over a whole design lattice in one
+compiled program per cell topology and asserts 1% parity against it.
 """
 from __future__ import annotations
 
@@ -163,6 +166,34 @@ def analyze(bank) -> Timing:
 # transient-simulated read path (HSPICE-analogue)
 # ---------------------------------------------------------------------------
 
+T_END_MIN_S = 0.5e-9        # stop-time floor for the read transient
+T_END_OVER_ANALYTIC = 6.0   # stop time as a multiple of the analytic t_cell
+T0_FRACTION = 0.05          # precharge-release instant as fraction of t_end
+
+
+def read_stimulus(cell, tech, v_sn: float, t0: float):
+    """The four read-path drive waveforms (rwl activation, precharge/
+    predischarge release, SN level, VDD rail) and the RBL idle level.
+
+    SINGLE source of truth for the stimulus recipe: the scalar
+    `simulate_read` and the batched `char_batch` pipeline both build
+    their waves here, which is what anchors their 1% parity contract —
+    edit timings/levels in one place only."""
+    vdd = tech.vdd
+    rwl_idle = vdd if not cell.rwl_active_high else 0.0
+    rwl_act = 0.0 if not cell.rwl_active_high else vdd
+    v_pre = 0.0 if cell.predischarge else vdd
+    en_idle = 0.0 if not cell.predischarge else vdd
+    en_off = vdd if not cell.predischarge else 0.0
+    waves = [
+        ([0.0, t0, t0 * 1.2], [rwl_idle, rwl_idle, rwl_act]),
+        ([0.0, t0 * 0.8, t0], [en_idle, en_idle, en_off]),
+        ([0.0, 1.0], [v_sn, v_sn]),
+        ([0.0, 1.0], [vdd, vdd]),
+    ]
+    return waves, v_pre
+
+
 def read_netlist(bank, n_seg: int = 8):
     """RBL column: WL driver -> RC ladder -> active cell + lumped leakers
     -> SA cap. Returns (Circuit, metadata)."""
@@ -204,7 +235,19 @@ def read_netlist(bank, n_seg: int = 8):
 
 
 def simulate_read(bank, n_steps=300, t_end=None, solver="jnp"):
-    """Transient RBL swing; returns (t_cell_sim_seconds, traces)."""
+    """Transient RBL swing; returns (t_cell_sim_seconds, traces).
+
+    Integrates in float64 (enable_x64): the MNA Jacobian's G_BIG Norton
+    rows put cond(J) around 1e6, so float32 Newton solves carry ~1e-1
+    relative noise into the traces — double precision is what makes this
+    path the accuracy ANCHOR the analytic model calibrates against (and
+    what the batched lattice pipeline asserts 1% parity with)."""
+    from jax.experimental import enable_x64
+    with enable_x64():
+        return _simulate_read_x64(bank, n_steps, t_end, solver)
+
+
+def _simulate_read_x64(bank, n_steps, t_end, solver):
     from repro.core.spice.transient import Transient
     import jax.numpy as jnp
     tech = bank.cfg.tech
@@ -213,34 +256,15 @@ def simulate_read(bank, n_steps=300, t_end=None, solver="jnp"):
     sys = ckt.build()
     tr = Transient(sys, solver=solver)
     t_an, _ = cell_read_time(bank)
-    t_end = t_end or max(6.0 * t_an, 0.5e-9)
-    t0 = 0.05 * t_end
-    vdd = tech.vdd
-    # waves: rwl (active level after t0), pre (release at t0), sn const
-    rwl_idle = vdd if not cell.rwl_active_high else 0.0
-    rwl_act = 0.0 if not cell.rwl_active_high else vdd
-    v_pre = 0.0 if cell.predischarge else vdd
-    # pre_en: PMOS precharge gate low->high (release); NMOS predischarge
-    # gate high->low (release) at t0
-    en_idle = 0.0 if not cell.predischarge else vdd
-    en_off = vdd if not cell.predischarge else 0.0
-    waves = [
-        ([0.0, t0, t0 * 1.2], [rwl_idle, rwl_idle, rwl_act]),
-        ([0.0, t0 * 0.8, t0], [en_idle, en_idle, en_off]),
-        ([0.0, 1.0], [meta["v_sn"], meta["v_sn"]]),
-        ([0.0, 1.0], [vdd, vdd]),
-    ]
+    t_end = t_end or max(T_END_OVER_ANALYTIC * t_an, T_END_MIN_S)
+    t0 = T0_FRACTION * t_end
+    waves, v_pre = read_stimulus(cell, tech, meta["v_sn"], t0)
     res = tr.run(waves, t_end, n_steps=n_steps,
                  v0=jnp.full((sys.n,), v_pre))
-    t = np.asarray(res["t"])
-    v_near = np.asarray(res["rbl_near"])
     swing = tech.v_sense_se
     target = v_pre + (swing if cell.predischarge else -swing)
-    if cell.predischarge:
-        hit = np.argmax(v_near >= target)
-        ok = v_near[-1] >= target
-    else:
-        hit = np.argmax(v_near <= target)
-        ok = v_near[-1] <= target
-    t_cell = (t[hit] - t0) if ok and hit > 0 else float("inf")
+    from repro.core.spice.transient import crossing_time
+    tc, valid = crossing_time(res["t"], res["rbl_near"], target,
+                              rising=cell.predischarge)
+    t_cell = float(tc) - t0 if bool(valid) else float("inf")
     return float(t_cell), res

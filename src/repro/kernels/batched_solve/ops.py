@@ -26,3 +26,13 @@ def batched_solve(J, r, block_b: int = 8):
 def solve1(J, r):
     """Single system (N, N) @ x = (N,)."""
     return batched_solve(J[None], r[None], block_b=1)[0]
+
+
+def solve(J, r, block_b: int = 8):
+    """Shape-dispatching entry: (N, N) or (B, N, N) systems. NOTE the
+    kernel computes in float32 regardless of input dtype — fine for DSE
+    screening sweeps, but the float64 characterization anchor
+    (repro.core.spice.char_batch) should use the "jnp" solver."""
+    if J.ndim == 2:
+        return solve1(J, r)
+    return batched_solve(J, r, block_b=block_b)

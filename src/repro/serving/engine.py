@@ -46,7 +46,14 @@ class ServeEngine:
         self.cache = self.model.init_cache(n_slots, self.window)
         self.pos = jnp.zeros((n_slots,), jnp.int32)
         self.active: List[Optional[Request]] = [None] * n_slots
-        self.last_tok = jnp.zeros((n_slots, 1), jnp.int32)
+        # host-side mirror of the per-slot feedback tokens: sampling
+        # happens on host anyway, so slots accumulate here and a SINGLE
+        # device update per step refreshes the copy (instead of one
+        # .at[slot].set() dispatch per slot per token). The mirror is
+        # snapshotted (np.array copy) on upload: jnp.asarray may alias
+        # host memory on CPU, and mutating an aliased buffer is UB.
+        self._last_tok_np = np.zeros((n_slots, 1), np.int32)
+        self.last_tok = jnp.asarray(np.array(self._last_tok_np))
         self.queue: List[Request] = []
         self.done: List[Request] = []
 
@@ -69,6 +76,7 @@ class ServeEngine:
         self.pos = self.pos.at[slot].set(row_pos)
 
     def _admit(self):
+        admitted = False
         for slot in self._free_slots():
             if not self.queue:
                 break
@@ -86,7 +94,10 @@ class ServeEngine:
             tok = self._sample(np.asarray(logits)[0], req)
             req.out_tokens.append(int(tok))
             self.active[slot] = req
-            self.last_tok = self.last_tok.at[slot, 0].set(int(tok))
+            self._last_tok_np[slot, 0] = tok
+            admitted = True
+        if admitted:
+            self.last_tok = jnp.asarray(np.array(self._last_tok_np))
 
     def _sample(self, logits: np.ndarray, req: Request) -> int:
         if req.temperature <= 0:
@@ -117,9 +128,10 @@ class ServeEngine:
                 continue
             tok = self._sample(logits_np[slot], req)
             req.out_tokens.append(tok)
-            self.last_tok = self.last_tok.at[slot, 0].set(tok)
+            self._last_tok_np[slot, 0] = tok
             if len(req.out_tokens) >= req.max_new_tokens:
                 self._retire(slot)
+        self.last_tok = jnp.asarray(np.array(self._last_tok_np))
         return True
 
     def run(self, max_steps=10000):
