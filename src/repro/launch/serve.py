@@ -1,9 +1,13 @@
 """Production serving launcher: loads (or initializes) params, starts the
 slot-based continuous-batching engine, and serves a synthetic request
-stream (or stdin token prompts).
+stream (or stdin token prompts). Decode is device-resident by default:
+`--decode-chunk K` fuses K decode+sample steps per host dispatch (one
+host sync per K tokens); `--host-loop` falls back to the per-token
+reference loop.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \\
-        --slots 4 --window 1024 [--reduced] [--ckpt-dir /ckpt/run1]
+        --slots 4 --window 1024 --decode-chunk 8 [--host-loop] \\
+        [--reduced] [--ckpt-dir /ckpt/run1]
 """
 from __future__ import annotations
 
@@ -19,6 +23,10 @@ def main():
     ap.add_argument("--window", type=int, default=1024)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--decode-chunk", type=int, default=8,
+                    help="tokens generated per host dispatch (device mode)")
+    ap.add_argument("--host-loop", action="store_true",
+                    help="per-token host sampling loop (parity reference)")
     ap.add_argument("--kv-dtype", default=None, choices=[None, "int8"])
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained params from a checkpoint dir")
@@ -52,7 +60,9 @@ def main():
                                                  jax.random.key(0)))
             print(f"restored params from step {step}")
 
-    eng = ServeEngine(cfg, params, n_slots=args.slots, window=args.window)
+    eng = ServeEngine(cfg, params, n_slots=args.slots, window=args.window,
+                      mode="host" if args.host_loop else "device",
+                      decode_chunk=args.decode_chunk)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(Request(
@@ -64,8 +74,12 @@ def main():
     done, steps = eng.run()
     dt = time.time() - t0
     toks = sum(len(r.out_tokens) for r in done)
+    mode = "host-loop" if args.host_loop else \
+        f"device chunk={eng.decode_chunk}"
     print(f"served {len(done)} requests / {toks} tokens in {steps} engine "
-          f"steps / {dt:.2f}s ({toks/max(dt,1e-9):.1f} tok/s)")
+          f"steps / {dt:.2f}s ({toks/max(dt,1e-9):.1f} tok/s, "
+          f"{eng.host_syncs} host syncs = "
+          f"{toks/max(eng.host_syncs,1):.1f} tok/sync, {mode})")
     return 0
 
 

@@ -17,6 +17,8 @@ API:
   loss(params, batch)                      -> (scalar, metrics)
   prefill(params, batch)                   -> (logits_last, cache, pos)
   decode_step(params, cache, token, pos)   -> (logits, cache)
+  decode_loop(params, cache, token, pos, emitted, max_new, done, eos,
+              sample_fn, keys, n_tokens=K) -> fused K-token decode scan
   init_cache(B, W)                         -> zeroed cache tree
   cache_specs(W)                           -> logical-axis tree for cache
   param_count(active_only=False)
@@ -570,6 +572,51 @@ class Model:
         h = norm(x, p["final_norm"], cfg)
         logits = self._logits_last(p, h[:, -1])
         return logits, cache
+
+    # ------------------------------------------------------------------
+    # decode loop: K fused decode+sample steps per host dispatch
+    # ------------------------------------------------------------------
+    def decode_loop(self, p, cache, token, pos, emitted, max_new, done, eos,
+                    sample_fn, keys, *, n_tokens):
+        """`n_tokens` decode steps fused into one lax.scan.
+
+        token: (B, 1) int32 feedback tokens; pos / emitted / max_new /
+        eos: (B,) int32 (eos < 0 means "no stop token"); done: (B,) bool;
+        keys: (n_tokens,) PRNG keys; sample_fn(logits, key) -> (B,) int32
+        (the engine closes it over per-slot temperature / top-k).
+
+        Per-slot stop state is carried through the scan: finished slots
+        freeze — their pos/emitted stop advancing and their feedback
+        token is re-fed, so the repeated cache write at the frozen
+        position is idempotent for KV families and only perturbs state
+        the host will overwrite on re-admission for recurrent families.
+
+        Returns (cache, token, pos, emitted, done, toks, live) with toks
+        and live shaped (n_tokens, B): token k belongs to slot b's output
+        stream iff live[k, b] (slots freeze monotonically, so the live
+        column is a prefix mask).
+
+        The carry signature is donation-safe: every carried array is
+        returned with identical shape/dtype, so callers can jit with
+        donate_argnums over (cache, token, pos, emitted, done) and the
+        KV cache updates in place instead of round-tripping.
+        """
+        def step(carry, key):
+            cache, token, pos, emitted, done = carry
+            logits, cache = self.decode_step(p, cache, token, pos)
+            tok = sample_fn(logits, key)
+            live = ~done
+            tok = jnp.where(live, tok, token[:, 0]).astype(jnp.int32)
+            inc = live.astype(jnp.int32)
+            emitted = emitted + inc
+            pos = pos + inc
+            done = done | (emitted >= max_new) | (live & (eos >= 0) &
+                                                  (tok == eos))
+            return (cache, tok[:, None], pos, emitted, done), (tok, live)
+
+        (cache, token, pos, emitted, done), (toks, live) = jax.lax.scan(
+            step, (cache, token, pos, emitted, done), keys, length=n_tokens)
+        return cache, token, pos, emitted, done, toks, live
 
     # ------------------------------------------------------------------
     # counting

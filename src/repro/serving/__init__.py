@@ -1,1 +1,4 @@
-from repro.serving.engine import ServeEngine
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.sampling import sample_host, sample_tokens
+
+__all__ = ["Request", "ServeEngine", "sample_host", "sample_tokens"]

@@ -1,0 +1,51 @@
+"""Samplers for the serving engine.
+
+`sample_tokens` is the device sampler used inside the fused decode scan:
+greedy where temperature <= 0, otherwise top-k temperature sampling via
+`jax.lax.top_k` + `jax.random.categorical`, batched over slots so the
+whole decode batch samples in one fused op with zero host syncs.
+
+`sample_host` is the original per-request host sampler, kept as the
+parity reference (and as the sampling path of the engine's
+``mode="host"`` per-token loop). The two are exactly equal under greedy
+decoding; under temperature sampling they draw from the same top-k
+support but from DIFFERENT random streams — `sample_host` consumes a
+`np.random.Generator`, `sample_tokens` a `jax.random` key — so
+stochastic token streams are not expected to match across modes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def sample_tokens(logits, key, temperature, top_k, *, k_max: int):
+    """Sample one token per row, fully on device.
+
+    logits: (B, V) float32; temperature: (B,) float32; top_k: (B,) int32.
+    `k_max` is the static top-k width compiled into the program; per-row
+    `top_k` is clipped into [1, k_max] by masking the tail of the top-k
+    candidates, so one compiled sampler serves every request mix.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    k_max = min(int(k_max), logits.shape[-1])
+    vals, idx = jax.lax.top_k(logits, k_max)            # (B, k_max)
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    keep = jnp.arange(k_max)[None, :] < jnp.clip(top_k, 1, k_max)[:, None]
+    scaled = jnp.where(keep, vals / t, -jnp.inf)
+    choice = jax.random.categorical(key, scaled, axis=-1)
+    sampled = jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0]
+    return jnp.where(temperature > 0.0, sampled.astype(jnp.int32), greedy)
+
+
+def sample_host(logits: np.ndarray, temperature: float, top_k: int,
+                rng: np.random.Generator) -> int:
+    """Host reference sampler: one token from one row of logits."""
+    if temperature <= 0:
+        return int(np.argmax(logits))
+    l = logits / temperature
+    idx = np.argpartition(l, -top_k)[-top_k:]
+    p = np.exp(l[idx] - l[idx].max())
+    p /= p.sum()
+    return int(rng.choice(idx, p=p))

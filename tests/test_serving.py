@@ -1,8 +1,11 @@
 """Serving engine integration: continuous batching over slots, greedy
-determinism, SWA ring engine, int8-cache engine."""
+determinism, SWA ring engine, int8-cache engine, chunked device-resident
+decode (parity with the per-token host loop, slot lifecycle mid-chunk,
+EOS stop, device sampler)."""
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -10,6 +13,7 @@ from repro.configs import get_config
 from repro.models.model import Model
 from repro.serving import ServeEngine
 from repro.serving.engine import Request
+from repro.serving.sampling import sample_host, sample_tokens
 
 
 def _engine(arch="llama3.2-1b", **cfg_over):
@@ -111,9 +115,10 @@ def test_engine_slot_lifecycle():
 
 def test_engine_partial_retire_keeps_long_request():
     """Unequal lengths: the short request retires and frees its slot
-    while the long one keeps decoding in place."""
+    while the long one keeps decoding in place (chunk of 2 so the long
+    request spans several engine steps)."""
     cfg, params = _engine()
-    eng = ServeEngine(cfg, params, n_slots=2, window=64)
+    eng = ServeEngine(cfg, params, n_slots=2, window=64, decode_chunk=2)
     prompt = (np.arange(4, dtype=np.int32) + 1) % cfg.vocab_size
     eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=1))
     eng.submit(Request(rid=1, prompt=prompt, max_new_tokens=5))
@@ -141,6 +146,126 @@ def test_engine_run_drains_queue_within_step_budget():
     assert steps <= 6 * 3
     assert sorted(r.rid for r in done) == list(range(6))
     assert eng.active == [None, None] and not eng.queue
+
+
+def test_chunked_greedy_matches_host_loop():
+    """Device-resident chunked decode (K=8) emits the identical greedy
+    token stream as the per-token host loop, across mixed prompt-length
+    admission groups and slot reuse."""
+    cfg, params = _engine()
+    prompts = [(np.arange(n, dtype=np.int32) * 3 + i) % cfg.vocab_size
+               for i, n in enumerate((5, 9, 5, 7))]
+    streams = {}
+    for mode in ("device", "host"):
+        eng = ServeEngine(cfg, params, n_slots=2, window=64, mode=mode,
+                          decode_chunk=8)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+        done, _ = eng.run()
+        streams[mode] = {r.rid: r.out_tokens for r in done}
+    assert streams["device"] == streams["host"]
+
+
+def test_chunked_slot_lifecycle_and_readmission():
+    """A slot that hits max_new_tokens mid-chunk emits EXACTLY
+    max_new_tokens tokens, is retired, and the freed slot is re-admitted
+    with a fresh cache row: the re-admitted request's continuation equals
+    a standalone prefill+decode loop."""
+    cfg, params = _engine()
+    m = Model(cfg)
+    prompts = [((np.arange(4, dtype=np.int32) + 7 * i) % cfg.vocab_size)
+               for i in range(3)]
+    eng = ServeEngine(cfg, params, n_slots=1, window=32, decode_chunk=8)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=3))
+    done, _ = eng.run()
+    assert [r.rid for r in done] == [0, 1, 2]
+    assert all(len(r.out_tokens) == 3 for r in done)
+    # the single slot was retired and re-admitted twice; the LAST request
+    # must decode from a freshly inserted cache row
+    logits, cache, pos = jax.jit(lambda pp, b: m.prefill(pp, b, W=32))(
+        params, {"tokens": jnp.asarray(prompts[2])[None]})
+    toks = [int(np.argmax(np.asarray(logits)[0]))]
+    dec = jax.jit(m.decode_step)
+    cur = jnp.asarray([[toks[-1]]], jnp.int32)
+    for _ in range(2):
+        logits, cache = dec(params, cache, cur, pos)
+        pos = pos + 1
+        toks.append(int(np.argmax(np.asarray(logits)[0])))
+        cur = jnp.asarray([[toks[-1]]], jnp.int32)
+    assert done[2].out_tokens == toks
+
+
+def test_max_new_one_emits_exactly_one_token():
+    """max_new_tokens=1 retires at prefill with a single token (the old
+    per-token loop over-emitted one decode token here)."""
+    cfg, params = _engine()
+    eng = ServeEngine(cfg, params, n_slots=1, window=32)
+    eng.submit(Request(rid=0, prompt=np.arange(5, dtype=np.int32),
+                       max_new_tokens=1))
+    done, _ = eng.run()
+    assert len(done) == 1 and len(done[0].out_tokens) == 1
+
+
+def test_prefill_finished_wave_does_not_strand_queue():
+    """A whole admission wave finishing at prefill (max_new=1) must not
+    stall run(): every queued request is still served."""
+    cfg, params = _engine()
+    eng = ServeEngine(cfg, params, n_slots=1, window=32)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=np.arange(4, dtype=np.int32) + i,
+                           max_new_tokens=1))
+    done, _ = eng.run()
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    assert all(len(r.out_tokens) == 1 for r in done)
+    assert not eng.queue
+
+
+def test_eos_stops_mid_chunk():
+    """An EOS hit inside a chunk freezes the slot immediately: the
+    stream is the no-EOS greedy stream truncated just after the EOS."""
+    cfg, params = _engine()
+    prompt = (np.arange(6, dtype=np.int32) * 5 + 1) % cfg.vocab_size
+    eng = ServeEngine(cfg, params, n_slots=1, window=64, decode_chunk=8)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=6))
+    full = eng.run()[0][0].out_tokens
+    assert len(full) == 6
+    eos = full[2]
+    cut = full.index(eos)
+    eng2 = ServeEngine(cfg, params, n_slots=1, window=64, decode_chunk=8)
+    eng2.submit(Request(rid=0, prompt=prompt, max_new_tokens=6,
+                        eos_id=int(eos)))
+    out = eng2.run()[0][0].out_tokens
+    assert out == full[:cut + 1]
+
+
+def test_device_sampler_matches_host_support():
+    """Device sampler: greedy rows equal argmax; stochastic rows draw
+    only from the same top-k support the host reference sampler uses,
+    and repeated draws on a fixed key cover more than one candidate."""
+    rng = np.random.default_rng(0)
+    logits = rng.normal(size=(4, 64)).astype(np.float32) * 3
+    temp = jnp.asarray([0.0, 0.8, 0.8, 1.5], jnp.float32)
+    topk = jnp.asarray([1, 5, 5, 3], jnp.int32)
+    key = jax.random.key(42)
+    toks = np.asarray(sample_tokens(jnp.asarray(logits), key, temp, topk,
+                                    k_max=32))
+    assert toks.shape == (4,) and toks.dtype == np.int32
+    assert toks[0] == int(np.argmax(logits[0]))
+    for b in (1, 2, 3):
+        support = set(np.argsort(logits[b])[-int(topk[b]):].tolist())
+        assert int(toks[b]) in support
+
+    support = set(np.argsort(logits[1])[-5:].tolist())
+    dev_draws, host_draws = set(), set()
+    hrng = np.random.default_rng(1)
+    for i in range(64):
+        k = jax.random.fold_in(key, i)
+        dev_draws.add(int(sample_tokens(jnp.asarray(logits), k, temp, topk,
+                                        k_max=32)[1]))
+        host_draws.add(sample_host(logits[1], 0.8, 5, hrng))
+    assert dev_draws <= support and host_draws <= support
+    assert len(dev_draws) > 1
 
 
 def test_engine_with_swa_ring(arch="mixtral-8x7b"):
