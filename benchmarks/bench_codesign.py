@@ -1,0 +1,149 @@
+"""Micro-benchmark: the device-batched (vdd x lattice x demand) co-design
+cube vs the scalar per-(point, voltage, demand) Python loop, with parity
+checks against the scalar references `dse.evaluate` / `dse.feasible` /
+`multibank.banks_needed`.
+
+    PYTHONPATH=src python benchmarks/bench_codesign.py [--smoke] [--repeats 1]
+
+Writes results/benchmarks/bench_codesign.json. The scalar loop is what
+the shmoo flow used to be: re-evaluate every config at every operating
+voltage, then test every demand pair-by-pair. The batched path shares
+per-(topology, voltage) electricals, vmaps the timing/power algebra over
+(vdd x lattice) and evaluates all three demand grids (feasibility,
+banks_needed, energy) in one device program each. Feasibility and bank
+counts must match BIT-FOR-BIT; the recorded speedup gates CI at >= 10x.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+VDD_SCALES = (0.7, 0.85, 1.0, 1.15)
+
+
+def _demands():
+    from repro.core.dse import Demand
+    # span the interesting corners: native-retention passes, refresh-only
+    # passes, frequency-infeasible, capacity-driven sizing
+    ds = [
+        Demand("act-l1", "L1", 3.0e8, 2.0e-6),
+        Demand("act-l1-fast", "L1", 1.2e9, 5.0e-7),
+        Demand("kv-l2", "L2", 8.0e8, 1.0e-3, capacity_bits=1 << 20),
+        Demand("stream-l2", "L2", 2.5e9, 1.0e-5),
+        Demand("weights-l2", "L2", 2.0e8, 3600.0, capacity_bits=1 << 22),
+        Demand("hopeless", "L2", 5.0e10, 1.0),
+    ]
+    steps = [2.0e-3, 2.0e-3, 5.0e-3, 5.0e-3, 5.0e-3, 5.0e-3]
+    return ds, steps
+
+
+def collect(repeats: int = 1, smoke: bool = False) -> dict:
+    from repro.core import dse
+    from repro.core import power as power_mod
+    from repro.core.dse import lattice_configs
+    from repro.core.dse_batch import codesign_metrics, evaluate_vdd_lattice
+    from repro.core.multibank import banks_needed
+
+    if smoke:
+        cfgs = lattice_configs(cells=("gc2t_nn", "gc2t_osos"),
+                               word_sizes=(16, 32), num_words=(16, 32, 64))
+    else:
+        cfgs = lattice_configs()
+    demands, steps = _demands()
+    V, P, D = len(VDD_SCALES), len(cfgs), len(demands)
+
+    def best_of(fn):
+        cold, walls = None, []
+        for _ in range(repeats + 1):
+            t0 = time.time()
+            res = fn()
+            walls.append(time.time() - t0)
+            cold = cold if cold is not None else walls[0]
+        return res, min(walls[1:]) if len(walls) > 1 else walls[0], cold
+
+    def scalar_loop():
+        feas = np.zeros((V, P, D), bool)
+        banks = np.zeros((V, P, D), np.int64)
+        points = []
+        for vi, v in enumerate(VDD_SCALES):
+            row = [dse.evaluate(c, vdd_scale=v) for c in cfgs]
+            points.append(row)
+            for pi, dp in enumerate(row):
+                for di, d in enumerate(demands):
+                    feas[vi, pi, di] = dse.feasible(dp, d)
+                    banks[vi, pi, di] = banks_needed(
+                        dp, d, capacity_bits=d.capacity_bits)
+        return feas, banks, points
+
+    def batched():
+        lat = evaluate_vdd_lattice(cfgs, VDD_SCALES)
+        feas, banks, energy, macro_ok = codesign_metrics(lat, demands, steps)
+        return lat, feas, banks, energy, macro_ok
+
+    (lat, bfeas, bbanks, benergy, _), batch_s, batch_cold = best_of(batched)
+    (sfeas, sbanks, spoints), loop_s, loop_cold = best_of(scalar_loop)
+
+    feas_exact = bool((bfeas == sfeas).all())
+    banks_exact = bool((bbanks == sbanks).all())
+    # energy parity vs the scalar power model: e_read per access recovered
+    # from power.analyze's dynamic read power at f_max
+    worst_e = 0.0
+    for vi in range(V):
+        for pi, dp in enumerate(spoints[vi]):
+            from repro.core.bank import build_bank
+            bank = build_bank(dp.cfg)
+            pw = power_mod.analyze(bank, dp.f_max_hz,
+                                   t_ret_s=dp.retention_s
+                                   if np.isfinite(dp.retention_s) else None,
+                                   vdd_scale=VDD_SCALES[vi])
+            e_read = pw.dynamic_read_w_at_fmax \
+                / (dp.f_max_hz * power_mod.ACTIVITY)
+            for di, d in enumerate(demands):
+                ref = d.read_freq_hz * steps[di] * e_read \
+                    + sbanks[vi, pi, di] * (dp.leakage_w + dp.refresh_w) \
+                    * steps[di]
+                got = benergy[vi, pi, di]
+                worst_e = max(worst_e,
+                              abs(got - ref) / max(abs(ref), 1e-30))
+    speedup = loop_s / max(batch_s, 1e-9)
+    return {
+        "n_configs": P, "n_vdd": V, "n_demands": D,
+        "n_scalar_evals": V * P, "grid_entries": V * P * D,
+        "loop_wall_s": round(loop_s, 3),
+        "batched_wall_s": round(batch_s, 3),
+        "loop_cold_s": round(loop_cold, 3),
+        "batched_cold_s": round(batch_cold, 3),
+        "speedup": round(speedup, 1),
+        "energy_max_rel_dev": float(f"{worst_e:.3g}"),
+        "checks": {"feasible_bit_exact": feas_exact,
+                   "banks_bit_exact": banks_exact,
+                   "energy_within_1e-9": bool(worst_e <= 1e-9),
+                   "speedup_ge_10x": speedup >= 10.0},
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small lattice for CI")
+    ap.add_argument("--out", default="results/benchmarks")
+    args = ap.parse_args()
+    res = collect(args.repeats, args.smoke)
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out, "bench_codesign.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    print(f"bench_codesign: {res['n_vdd']}x{res['n_configs']}x"
+          f"{res['n_demands']} grid  loop {res['loop_wall_s']}s  "
+          f"batched {res['batched_wall_s']}s  speedup {res['speedup']}x  "
+          f"feas_exact {res['checks']['feasible_bit_exact']}  "
+          f"banks_exact {res['checks']['banks_bit_exact']}")
+    return 0 if all(res["checks"].values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

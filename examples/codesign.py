@@ -1,0 +1,83 @@
+"""Voltage-aware workload -> memory co-design, end-to-end (the paper's
+"retention tuned on-the-fly by changing the operating voltage" married
+to the GainSight-style workload profiles):
+
+    PYTHONPATH=src python examples/codesign.py --archs qwen2-0.5b llama3.2-1b --shape decode_32k
+
+1. profile_arch()    - per-(arch, shape) L1/L2 cache demands
+2. CoDesignQuery     - ONE query: evaluate the design lattice across an
+                       operating-voltage ladder (device-batched), pick
+                       the best (config, voltage) per cache level, size
+                       the interleaved macro
+3. CoDesignReport    - heterogeneous per-workload plan: the L1 and L2
+                       picks may sit at DIFFERENT operating points
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.api import CoDesignQuery, Session, SweepQuery
+from repro.workloads.profiler import profile_arch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", nargs="+",
+                    default=["qwen2-0.5b", "llama3.2-1b"])
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--vdd-scales", nargs="+", type=float,
+                    default=[0.7, 0.85, 1.0, 1.15])
+    ap.add_argument("--objective", choices=("energy", "area"),
+                    default="energy")
+    ap.add_argument("--out", default="/tmp/repro_codesign")
+    args = ap.parse_args()
+
+    print(f"== profiling {len(args.archs)} workload(s) @ {args.shape} ==")
+    profiles = tuple(profile_arch(a, args.shape) for a in args.archs)
+    for p in profiles:
+        print(f"  {p.arch}:{p.shape}  step={p.step_time_s:.2e}s  "
+              f"L1 {p.l1_read_hz/1e6:.0f} MHz/bank "
+              f"(lifetime {p.act_lifetime_s:.1e}s)  "
+              f"L2 {p.l2_read_hz/1e6:.0f} MHz/bank")
+
+    session = Session()
+    query = CoDesignQuery(
+        profiles=profiles,
+        sweep=SweepQuery(word_sizes=(16, 32, 64), num_words=(16, 32, 64)),
+        vdd_scales=tuple(args.vdd_scales),
+        objective=args.objective)
+    print(f"== co-design: {len(query.sweep.configs(session.tech))} configs"
+          f" x {len(query.vdd_scales)} voltages, objective="
+          f"{args.objective} ==")
+    report = session.run(query)
+
+    for plan in report:
+        print(f"-- {plan['workload']} ({plan['kind']}) --")
+        for level, e in plan["levels"].items():
+            if not e["feasible"]:
+                print(f"  {level}: INFEASIBLE even multibanked "
+                      f"(demand {e['read_freq_hz']/1e6:.0f} MHz, "
+                      f"lifetime {e['lifetime_s']:.1e}s)")
+                continue
+            b = e["bank"]
+            print(f"  {level}: {b['cell']} "
+                  f"{b['word_size']}x{b['num_words']}"
+                  f"{'+LS' if b['wwlls'] else ''} @ "
+                  f"{e['vdd_v']:.2f}V (scale {e['vdd_scale']:g})  "
+                  f"x{e['banks_needed']} banks  "
+                  f"ret={b['retention_s']:.1e}s  "
+                  f"macro {e['macro_area_um2']:.0f} um2, "
+                  f"{e['macro_f_max_hz']/1e6:.0f} MHz, "
+                  f"{e['energy_per_inference_j']:.2e} J/step")
+        print(f"  total: {plan['total_area_um2']:.0f} um2, "
+              f"{plan['total_energy_per_inference_j']:.2e} J/step, "
+              f"feasible={plan['feasible']}")
+
+    out = report.write(args.out)
+    print(f"wrote {out}/{report.filename}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

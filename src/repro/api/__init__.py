@@ -23,18 +23,29 @@ simulates every gain-cell read column, one compiled program per cell
 topology, and the returned `CalibratedTable` reports the
 analytic-vs-transient error per point.
 
+`CoDesignQuery` closes the loop between the two halves of the repo: it
+consumes AI-workload Profiles from `repro.workloads.profiler`, evaluates
+the design lattice across an operating-voltage ladder (the paper's
+"retention tuned on-the-fly by changing the operating voltage"), and
+returns a per-workload heterogeneous memory plan — best L1 bank at its
+best voltage + best L2 bank at its (possibly different) one — with the
+whole (vdd x lattice x demand) cube batched on device
+(`repro.core.dse_batch`).
+
 The legacy entry points (`GCRAMCompiler`, `dse.sweep`,
 `multibank.build_multibank`) remain as thin deprecated shims over this
 API.
 """
-from repro.api.queries import (CompileQuery, MatchQuery, OptimizeQuery,
-                               Query, SweepQuery)
-from repro.api.results import (CalibratedTable, CompileResult, DesignTable,
-                               MatchResult, OptimizeResult, Result)
+from repro.api.queries import (CoDesignQuery, CompileQuery, MatchQuery,
+                               OptimizeQuery, Query, SweepQuery)
+from repro.api.results import (CalibratedTable, CoDesignReport,
+                               CompileResult, DesignTable, MatchResult,
+                               OptimizeResult, Result)
 from repro.api.session import Session
 
 __all__ = [
     "Session", "Query", "CompileQuery", "SweepQuery", "MatchQuery",
-    "OptimizeQuery", "Result", "CompileResult", "DesignTable",
-    "CalibratedTable", "MatchResult", "OptimizeResult",
+    "CoDesignQuery", "OptimizeQuery", "Result", "CompileResult",
+    "DesignTable", "CalibratedTable", "MatchResult", "CoDesignReport",
+    "OptimizeResult",
 ]

@@ -83,6 +83,40 @@ class MatchQuery(Query):
 
 
 @dataclass(frozen=True)
+class CoDesignQuery(Query):
+    """Workload -> memory co-design over (design lattice x operating
+    voltage): consume workload Profiles from `repro.workloads.profiler`,
+    evaluate the sweep lattice at every `vdd_scales` operating point
+    (one device-batched program per cell topology), and for each
+    workload's L1/L2 demand pick the feasible (config, voltage) combo
+    minimizing the objective, sized as an interleaved multibank macro.
+
+    The result is a `CoDesignReport`: one heterogeneous per-workload
+    plan (best L1 bank at its best operating point + best L2 bank at
+    its, possibly different, operating point), memoized in the Session
+    like sweep tables.
+
+      profiles      tuple of Profile (frozen/hashable)
+      vdd_scales    operating-voltage multipliers of tech.vdd — the
+                    paper's "retention tuned on-the-fly by changing the
+                    operating voltage" knob
+      objective     "energy" -> minimize joules per inference step
+                    (dynamic read + macro standby over the step);
+                    "area" -> minimize macro area in um^2
+      allow_refresh / max_banks follow MatchQuery semantics
+    """
+    profiles: Tuple["Profile", ...] = ()
+    sweep: SweepQuery = field(default_factory=SweepQuery)
+    vdd_scales: Tuple[float, ...] = (0.7, 0.85, 1.0, 1.15)
+    allow_refresh: bool = True
+    max_banks: int = 1024
+    objective: str = "energy"
+
+    def run(self, session):
+        return session.codesign(self)
+
+
+@dataclass(frozen=True)
 class OptimizeQuery(Query):
     """Continuous co-optimization of (write VT, write width, WWL boost)
     for a retention target — wraps dse.grad_optimize."""

@@ -140,6 +140,52 @@ class MatchResult(Result):
 
 
 @dataclass
+class CoDesignReport(Result):
+    """Per-workload heterogeneous memory plan from `CoDesignQuery`.
+
+    `plans` has one dict per profiled workload:
+
+      {"workload": "arch:shape", "kind": ..., "step_time_s": ...,
+       "feasible": bool,                  # both levels plannable
+       "total_area_um2": ..., "total_energy_per_inference_j": ...,
+       "levels": {"L1": <entry>, "L2": <entry>}}
+
+    and each level entry carries the chosen bank (`DesignPoint.as_dict`
+    including its `vdd_scale`), the operating rail `vdd_v` in volts, the
+    interleaved-macro sizing (`banks_needed`, `macro_area_um2`,
+    `macro_capacity_bits`, `macro_f_max_hz`), the macro standby watts
+    and the joules per inference step — or, when infeasible, the demand
+    that could not be met. `lattice` is the underlying
+    `repro.core.dse_batch.VddLattice` for further slicing."""
+    plans: List[dict]
+    query: object = None
+    lattice: object = None
+    filename = "codesign.json"
+
+    def __iter__(self):
+        return iter(self.plans)
+
+    def __getitem__(self, workload: str) -> dict:
+        for p in self.plans:
+            if p["workload"] == workload:
+                return p
+        raise KeyError(workload)
+
+    @property
+    def all_feasible(self) -> bool:
+        return all(p["feasible"] for p in self.plans)
+
+    def as_dict(self):
+        n_vdd, n_cfg = self.lattice.shape if self.lattice is not None \
+            else (0, 0)
+        return {"n_workloads": len(self.plans),
+                "n_configs": n_cfg, "n_vdd": n_vdd,
+                "vdd_scales": list(getattr(self.lattice, "vdd_scales", ())),
+                "all_feasible": self.all_feasible,
+                "plans": self.plans}
+
+
+@dataclass
 class OptimizeResult(Result):
     """grad_optimize outcome (optimized design + discrete validation)."""
     raw: dict

@@ -19,16 +19,21 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Iterable, List, Optional
 
-from repro.api.queries import (CompileQuery, MatchQuery, OptimizeQuery,
-                               Query, SweepQuery)
-from repro.api.results import (CalibratedTable, CompileResult, DesignTable,
-                               MatchResult, OptimizeResult, Result)
+import numpy as np
+
+from repro.api.queries import (CoDesignQuery, CompileQuery, MatchQuery,
+                               OptimizeQuery, Query, SweepQuery)
+from repro.api.results import (CalibratedTable, CoDesignReport, CompileResult,
+                               DesignTable, MatchResult, OptimizeResult,
+                               Result)
 from repro.core import compiler as compiler_mod
 from repro.core import dse
+from repro.core import dse_batch
 from repro.core import multibank as mb_mod
 from repro.core.bank import BankConfig
 from repro.core.dse import Demand, DesignPoint
-from repro.core.dse_batch import evaluate_batch
+from repro.core.dse_batch import VddLattice, evaluate_batch, \
+    evaluate_vdd_lattice
 from repro.core.spice import char_batch
 from repro.core.techfile import SYN40, TechFile
 
@@ -43,6 +48,10 @@ class Session:
         # (config key, sim_steps, solver) — shared between overlapping
         # transient-fidelity sweeps exactly like the analytic points
         self._tchars: Dict[tuple, object] = {}
+        # (sweep query, vdd_scales) -> VddLattice, and whole co-design
+        # reports keyed by the (hashable, frozen) CoDesignQuery
+        self._vlattices: Dict[tuple, VddLattice] = {}
+        self._codesigns: Dict[CoDesignQuery, CoDesignReport] = {}
 
     # ------------------------------------------------------------------
     def run(self, query: Query) -> Result:
@@ -150,7 +159,10 @@ class Session:
             raise ValueError(f"duplicate demand keys in match: {dkeys} "
                              "(grid/banks_needed are keyed by level:name)")
         table = self.sweep(sweep)
-        grid = dse.shmoo(table.points, demands, allow_refresh=allow_refresh)
+        # one device program over the whole (points x demands) grid —
+        # bit-for-bit with the scalar dse.shmoo loop it replaced
+        grid = dse_batch.shmoo_batch(table.points, demands,
+                                     allow_refresh=allow_refresh)
         fastest = table.best("f_max_hz")
         rows, banks = [], {}
         for d in demands:
@@ -180,6 +192,100 @@ class Session:
     def multibank(self, cfg: BankConfig, n_banks: int) -> "mb_mod.MultiBankPoint":
         """Compose an N-bank interleaved macro around a (cached) bank."""
         return mb_mod.compose_multibank(self.evaluate(cfg), n_banks)
+
+    def vdd_lattice(self, sweep: SweepQuery = SweepQuery(),
+                    vdd_scales=(0.7, 0.85, 1.0, 1.15)) -> VddLattice:
+        """Evaluate (and cache) the sweep lattice across an operating-
+        voltage ladder — the third lattice dimension of the co-design
+        flow. Analytic tier only: a transient-fidelity sweep is rejected
+        rather than silently downgraded."""
+        if sweep.fidelity != "analytic":
+            raise ValueError(
+                f"vdd_lattice/codesign run the analytic tier only; got "
+                f"SweepQuery(fidelity={sweep.fidelity!r}). Calibrate a "
+                "shortlist separately with SweepQuery(fidelity="
+                "'transient').")
+        # key on the lattice-shaping fields only, so sweeps differing in
+        # evaluation knobs (batched, sim_steps, solver) share the table
+        key = (sweep.cells, sweep.word_sizes, sweep.num_words,
+               sweep.write_vts, sweep.wwlls,
+               tuple(float(v) for v in vdd_scales))
+        if key not in self._vlattices:
+            self._vlattices[key] = evaluate_vdd_lattice(
+                sweep.configs(self.tech), key[-1])
+        return self._vlattices[key]
+
+    def codesign(self, query: CoDesignQuery) -> CoDesignReport:
+        """Workload -> memory co-design: per profiled workload, pick the
+        best (config, operating voltage) for each cache level and size
+        its interleaved macro — the whole (vdd x lattice x demand) cube
+        is evaluated device-batched (repro.core.dse_batch), never with
+        the scalar per-pair loop."""
+        if query.objective not in ("energy", "area"):
+            raise ValueError(f"unknown CoDesignQuery objective "
+                             f"{query.objective!r} (energy | area)")
+        if not query.profiles:
+            raise ValueError("CoDesignQuery needs >= 1 Profile "
+                             "(see repro.workloads.profiler)")
+        if query in self._codesigns:
+            return self._codesigns[query]
+        lat = self.vdd_lattice(query.sweep, query.vdd_scales)
+        demands, steps = [], []
+        for prof in query.profiles:
+            for d in prof.demands():
+                demands.append(d)
+                steps.append(prof.step_time_s)
+        feas, banks, energy, macro_ok = dse_batch.codesign_metrics(
+            lat, demands, steps, allow_refresh=query.allow_refresh,
+            max_banks=query.max_banks)
+        _, P = lat.shape
+        plans, j = [], 0
+        for prof in query.profiles:
+            levels = {}
+            for d in prof.demands():
+                # a level is plannable if SOME interleaved macro serves it
+                # (banks_needed tiles past a single bank's f_max, exactly
+                # like MatchQuery's fastest-bank fallback)
+                ok = macro_ok[:, :, j]
+                entry = {"read_freq_hz": d.read_freq_hz,
+                         "lifetime_s": d.lifetime_s,
+                         "capacity_bits": d.capacity_bits,
+                         "n_feasible": int(feas[:, :, j].sum()),
+                         "n_macro_feasible": int(ok.sum()),
+                         "feasible": bool(ok.any())}
+                if entry["feasible"]:
+                    score = energy[:, :, j] if query.objective == "energy" \
+                        else banks[:, :, j] * lat.area_um2[None, :]
+                    vi, pi = divmod(int(np.argmin(
+                        np.where(ok, score, np.inf))), P)
+                    n = int(banks[vi, pi, j])
+                    dp = lat.point(vi, pi)
+                    macro = mb_mod.compose_multibank(dp, n)
+                    entry.update(
+                        bank=dp.as_dict(),
+                        vdd_scale=float(lat.vdd_scales[vi]),
+                        vdd_v=self.tech.vdd * float(lat.vdd_scales[vi]),
+                        banks_needed=n,
+                        macro_area_um2=macro.area_um2,
+                        macro_capacity_bits=macro.capacity_bits,
+                        macro_f_max_hz=macro.f_max_hz,
+                        standby_w=n * dp.standby_w,
+                        energy_per_inference_j=float(energy[vi, pi, j]))
+                levels[d.level] = entry
+                j += 1
+            okl = [e for e in levels.values() if e["feasible"]]
+            plans.append({
+                "workload": f"{prof.arch}:{prof.shape}",
+                "kind": prof.kind, "step_time_s": prof.step_time_s,
+                "feasible": len(okl) == len(levels),
+                "total_area_um2": sum(e["macro_area_um2"] for e in okl),
+                "total_energy_per_inference_j":
+                    sum(e["energy_per_inference_j"] for e in okl),
+                "levels": levels,
+            })
+        report = CoDesignReport(plans, query, lat)
+        self._codesigns[query] = report
+        return report
 
     def optimize(self, query: OptimizeQuery = OptimizeQuery()
                  ) -> OptimizeResult:

@@ -39,6 +39,12 @@ from repro.core.techfile import SYN40, PHI_T
 
 @dataclass
 class DesignPoint:
+    """One evaluated bank at one operating point.
+
+    Units: `area_um2` um^2; `f_max_hz` Hz; bandwidths bits/s; powers
+    watts; `retention_s` / `t_read_s` / `t_write_s` seconds. `vdd_scale`
+    is the operating-voltage multiplier the point was evaluated at
+    (tech.vdd * vdd_scale; 1.0 = the deck's nominal rail)."""
     cfg: BankConfig
     area_um2: float
     f_max_hz: float
@@ -51,10 +57,12 @@ class DesignPoint:
     swing_ok: bool
     t_read_s: float = 0.0
     t_write_s: float = 0.0
+    vdd_scale: float = 1.0
 
     @property
     def standby_w(self) -> float:
-        """Total standby power: leakage + refresh (the paper's idle cost)."""
+        """Total standby power (W): leakage + refresh (the paper's idle
+        cost)."""
         return self.leakage_w + self.refresh_w
 
     def as_dict(self):
@@ -63,22 +71,27 @@ class DesignPoint:
              "write_vt": self.cfg.write_vt}
         for k in ("area_um2", "f_max_hz", "eff_bw_bps", "leakage_w",
                   "refresh_w", "retention_s", "swing_ok", "t_read_s",
-                  "t_write_s", "standby_w"):
+                  "t_write_s", "standby_w", "vdd_scale"):
             d[k] = getattr(self, k)
         return d
 
 
-def evaluate(cfg: BankConfig) -> DesignPoint:
+def evaluate(cfg: BankConfig, vdd_scale: float = 1.0) -> DesignPoint:
+    """Scalar reference evaluation of one config at one operating voltage
+    (`vdd_scale` multiplies tech.vdd; geometry/floorplan are voltage-
+    independent). The batched evaluators in `repro.core.dse_batch` assert
+    parity against this function."""
     bank = build_bank(cfg)
-    t = timing_mod.analyze(bank)
+    t = timing_mod.analyze(bank, vdd_scale=vdd_scale)
     if bank.is_gc:
         cell = bank.cell
         r = ret_mod.analyze(cell, cfg.tech, wwlls=cfg.wwlls,
-                            wwl_boost=cfg.wwl_boost)
+                            wwl_boost=cfg.wwl_boost, vdd_scale=vdd_scale)
         ret = r.t_ret_s
     else:
         ret = float("inf")
-    p = power_mod.analyze(bank, t.f_max_hz, t_ret_s=ret if bank.is_gc else None)
+    p = power_mod.analyze(bank, t.f_max_hz, t_ret_s=ret if bank.is_gc else None,
+                          vdd_scale=vdd_scale)
     ws = cfg.word_size
     if bank.is_gc:
         # dual port: concurrent read + write at f_max
@@ -92,7 +105,7 @@ def evaluate(cfg: BankConfig) -> DesignPoint:
         ebw = rbw + wbw
     return DesignPoint(cfg, bank.area_um2, t.f_max_hz, rbw, wbw, ebw,
                        p.leakage_w, p.refresh_w, ret, t.read_swing_ok,
-                       t.t_read_s, t.t_write_s)
+                       t.t_read_s, t.t_write_s, vdd_scale)
 
 
 def lattice_configs(cells=("gc2t_nn", "gc2t_np", "gc2t_osos"),
@@ -134,9 +147,27 @@ def sweep(cells=("gc2t_nn", "gc2t_np", "gc2t_osos"),
 # shmoo (Fig 10)
 # ---------------------------------------------------------------------------
 
-@dataclass
+@dataclass(frozen=True)
 class Demand:
-    """One workload's cache demand (GainSight analogue)."""
+    """One workload's cache demand (GainSight analogue).
+
+    Units — read carefully, these are the contract of the whole matching
+    flow:
+      read_freq_hz   read-request rate in Hz arriving at ONE memory
+                     instance of the profiled hierarchy (the workload
+                     profiler has already split the chip's aggregate
+                     traffic over its cores x banks instances — it is
+                     NOT the whole-chip feed). Single-bank feasibility
+                     (`feasible`) compares it directly against a bank's
+                     `f_max_hz`; when one bank falls short,
+                     `multibank.banks_needed` sizes an interleaved macro
+                     whose AGGREGATE n * f_bank covers this same rate.
+      lifetime_s     how long a datum must stay readable, in seconds.
+      capacity_bits  macro capacity the demand needs (bits; 0 = don't
+                     size for capacity).
+
+    Frozen (hashable) so queries carrying Demands can key session caches.
+    """
     name: str
     level: str                 # "L1" | "L2"
     read_freq_hz: float
@@ -147,7 +178,17 @@ class Demand:
 def feasible(dp: DesignPoint, d: Demand, *, allow_refresh=True) -> bool:
     """A bank works for a demand if it meets the read frequency and either
     natively retains data for the lifetime or (if allowed) refreshes at
-    <10% bandwidth overhead (multi-banked designs absorb capacity)."""
+    <10% bandwidth overhead (multi-banked designs absorb capacity).
+
+    The refresh rule, exactly: with `allow_refresh=True` a bank whose
+    `retention_s` falls short of `d.lifetime_s` still passes when
+    `refresh_rate < 0.1 * f_max_hz`, where `refresh_rate = num_words /
+    retention_s` is the row-rewrite rate (rows/s) needed to keep the
+    array alive. `retention_s <= 0` (the cell cannot hold the margin at
+    all, e.g. at a collapsed operating voltage) never passes, refresh or
+    not. This is the SCALAR reference; `repro.core.dse_batch.
+    feasible_grid` evaluates the same rule over a whole
+    (vdd x lattice x demand) grid on device, bit-for-bit."""
     if not dp.swing_ok or dp.f_max_hz < d.read_freq_hz:
         return False
     if dp.retention_s >= d.lifetime_s:
@@ -158,6 +199,13 @@ def feasible(dp: DesignPoint, d: Demand, *, allow_refresh=True) -> bool:
     return refresh_rate < 0.1 * dp.f_max_hz
 
 
+def shmoo_key(cfg: BankConfig) -> str:
+    """Grid-column label of one config — single source of truth for the
+    scalar `shmoo` and the batched `dse_batch.shmoo_batch`."""
+    return f"{cfg.cell}/{cfg.word_size}x{cfg.num_words}" + \
+        ("+ls" if cfg.wwlls else "")
+
+
 def shmoo(points: List[DesignPoint], demands: List[Demand], *,
           allow_refresh: bool = True) -> dict:
     """Fig 10 grid: demand x bank-config -> pass/fail."""
@@ -165,9 +213,8 @@ def shmoo(points: List[DesignPoint], demands: List[Demand], *,
     for d in demands:
         row = {}
         for dp in points:
-            key = f"{dp.cfg.cell}/{dp.cfg.word_size}x{dp.cfg.num_words}" + \
-                ("+ls" if dp.cfg.wwlls else "")
-            row[key] = feasible(dp, d, allow_refresh=allow_refresh)
+            row[shmoo_key(dp.cfg)] = feasible(dp, d,
+                                              allow_refresh=allow_refresh)
         grid[f"{d.level}:{d.name}"] = row
     return grid
 

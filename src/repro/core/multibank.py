@@ -22,6 +22,9 @@ XBAR_DELAY_S = 35e-12    # one crossbar hop on the read path
 
 @dataclass
 class MultiBankPoint:
+    """Composed macro metrics. Units follow DesignPoint: `area_um2`
+    um^2, `f_max_hz` Hz, `eff_bw_bps` bits/s, powers watts,
+    `retention_s` seconds (per bank — banking does not change it)."""
     n_banks: int
     bank: dse.DesignPoint
     area_um2: float
@@ -79,7 +82,13 @@ def banks_needed(dp: dse.DesignPoint, demand: dse.Demand,
     per-bank read frequency is 1 by construction (interleaving divides the
     request stream); what multibanking buys is AGGREGATE frequency and
     capacity — return the count needed so that n * f_bank >= n_requests
-    AND n * bits >= capacity."""
+    AND n * bits >= capacity.
+
+    Units: `demand.read_freq_hz` Hz, `capacity_bits` bits. Returns
+    `max_banks + 1` as the infeasibility sentinel (per-bank retention/
+    refresh rule fails, swing fails, or f_max <= 0) — see `dse.feasible`
+    for the exact refresh rule. Scalar reference for
+    `repro.core.dse_batch.banks_needed_grid`."""
     if not dp.swing_ok or dp.f_max_hz <= 0:
         return max_banks + 1
     n_freq = math.ceil(demand.read_freq_hz / dp.f_max_hz)

@@ -20,6 +20,7 @@ ACTIVITY = 0.5
 
 @dataclass
 class Power:
+    """All fields in watts (at the analyzed frequency/operating point)."""
     leakage_w: float
     cell_leakage_w: float          # the Fig 7c array comparison
     periph_leakage_w: float
@@ -31,7 +32,10 @@ class Power:
         return self.__dict__.copy()
 
 
-def analyze(bank, f_hz: float, *, t_ret_s: float = None) -> Power:
+def analyze(bank, f_hz: float, *, t_ret_s: float = None,
+            vdd_scale: float = 1.0) -> Power:
+    from repro.core.timing import bank_at_vdd
+    bank = bank_at_vdd(bank, vdd_scale)
     tech = bank.cfg.tech
     n_bits = bank.cfg.bits
     # GC cells: no VDD->GND path (WBL parks low; SN leak is the retention

@@ -21,11 +21,14 @@ import numpy as np
 
 from repro.core.cells import Bitcell
 from repro.core.spice.mna import channel_current_raw
-from repro.core.techfile import TechFile
+from repro.core.techfile import TechFile, with_vdd_scale
 
 
 @dataclass
 class Retention:
+    """Retention analysis result. Units: `t_ret_s` seconds, voltages in
+    volts, `i_leak0_a` (the SN leak at the freshly-written level) in
+    amperes."""
     t_ret_s: float
     v_sn0: float
     v_margin: float
@@ -67,8 +70,13 @@ def leak_fn(cell: Bitcell, tech: TechFile):
 
 
 def analyze(cell: Bitcell, tech: TechFile, *, wwlls=False, wwl_boost=0.55,
-            n_steps=4000) -> Retention:
-    """Log-time ODE integration of dV/dt = -I(V)/C_SN (decaying '1')."""
+            n_steps=4000, vdd_scale: float = 1.0) -> Retention:
+    """Log-time ODE integration of dV/dt = -I(V)/C_SN (decaying '1').
+
+    `vdd_scale` evaluates the cell at a scaled operating voltage (the
+    paper's on-the-fly retention knob): the written SN level, the margin
+    and the write-device leak all follow the scaled rail."""
+    tech = with_vdd_scale(tech, vdd_scale)
     c_sn = cell.sn_cap(tech)
     v0 = cell.v_sn_written(tech, 1, wwlls=wwlls, wwl_boost=wwl_boost)
     v_m = _margin_voltage(cell, tech)

@@ -12,8 +12,9 @@ TechFile (the paper's Fig 1(a) porting flow, step 1).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict
+from typing import Dict, Tuple
 
 PHI_T = 0.02585  # kT/q at 300 K
 
@@ -118,3 +119,38 @@ class TechFile:
 
 
 SYN40 = TechFile()
+
+
+# ---------------------------------------------------------------------------
+# operating points (paper: retention is tuned "on-the-fly by changing the
+# operating voltage")
+# ---------------------------------------------------------------------------
+
+# memoized so a given (deck, scale) pair always yields the SAME TechFile
+# object: dse_batch.topology_key groups by id(cfg.tech), and session/point
+# caches rely on stable identity across calls. Values keep a reference to
+# the base deck so its id() cannot be recycled while the entry lives.
+_VDD_SCALED: Dict[tuple, Tuple["TechFile", "TechFile"]] = {}
+
+
+def with_vdd_scale(tech: TechFile, vdd_scale: float) -> TechFile:
+    """The deck at a scaled operating voltage: identical devices, wires
+    and geometry, `vdd` multiplied by `vdd_scale`. Everything downstream
+    (written SN levels, read currents, retention leakage, dynamic CV^2
+    energies) follows automatically because it reads only `tech.vdd`;
+    voltage-independent periphery constants (sense swings, SA/DFF/stage
+    delays) are deliberately left untouched — the VDD axis models the
+    ARRAY operating point, not a resized periphery."""
+    vdd_scale = float(vdd_scale)
+    if vdd_scale == 1.0:
+        return tech
+    if vdd_scale <= 0.0:
+        raise ValueError(f"vdd_scale must be > 0, got {vdd_scale}")
+    key = (id(tech), vdd_scale)
+    hit = _VDD_SCALED.get(key)
+    if hit is None:
+        scaled = dataclasses.replace(
+            tech, name=f"{tech.name}@{vdd_scale:g}vdd",
+            vdd=tech.vdd * vdd_scale)
+        _VDD_SCALED[key] = hit = (scaled, tech)
+    return hit[0]

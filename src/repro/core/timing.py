@@ -19,6 +19,7 @@ compiled program per cell topology and asserts 1% parity against it.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 
@@ -27,7 +28,7 @@ import numpy as np
 from repro.core import bank as bank_mod
 from repro.core.cells import Sram6T
 from repro.core.spice import devices as dv
-from repro.core.techfile import TechFile
+from repro.core.techfile import TechFile, with_vdd_scale
 
 FO4_S = 18e-12      # fanout-4 inverter delay in syn40
 LE_BRANCH = 2.0     # logical-effort branching per decode stage
@@ -65,8 +66,20 @@ def chain_unit(analog_s, unit_s):
     return unit_s
 
 
+def bank_at_vdd(bank, vdd_scale: float):
+    """A shallow view of `bank` whose config carries the vdd-scaled deck.
+    Geometry, floorplan and wire RC are voltage-independent, so the copy
+    shares them; only the electrical algebra sees the scaled rail."""
+    if vdd_scale == 1.0:
+        return bank
+    cfg = dataclasses.replace(bank.cfg,
+                              tech=with_vdd_scale(bank.cfg.tech, vdd_scale))
+    return dataclasses.replace(bank, cfg=cfg)
+
+
 @dataclass
 class Timing:
+    """All delays in seconds, `f_max_hz` in hertz."""
     t_read_s: float
     t_write_s: float
     t_wl_s: float
@@ -141,7 +154,8 @@ def write_time(bank) -> float:
     return t_wl + t_bl + t_sn
 
 
-def analyze(bank) -> Timing:
+def analyze(bank, *, vdd_scale: float = 1.0) -> Timing:
+    bank = bank_at_vdd(bank, vdd_scale)
     tech = bank.cfg.tech
     t_dec = decoder_delay(bank.rows)
     t_wl = wordline_delay(bank)

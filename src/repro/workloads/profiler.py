@@ -36,8 +36,19 @@ from repro.core.dse import Demand
 from repro.launch import roofline as rl
 
 
-@dataclass
+@dataclass(frozen=True)
 class Profile:
+    """One (arch, shape) workload's memory-demand profile.
+
+    Units: times/lifetimes in seconds, traffic in bytes per step,
+    `l1_read_hz` / `l2_read_hz` in PER-INSTANCE request Hz — the
+    aggregate on-chip feed is already split over the profiled
+    hierarchy's (cores x banks) memory instances. Single-bank
+    feasibility compares these directly against a bank's `f_max_hz`;
+    when one bank falls short, multibanking covers the same rate in
+    aggregate (the `core.dse.Demand` convention).
+    Frozen (hashable) so `repro.api.CoDesignQuery` tuples of Profiles can
+    key session memoization."""
     arch: str
     shape: str
     kind: str
@@ -45,14 +56,16 @@ class Profile:
     weights_bytes: float
     kv_bytes: float
     act_bytes_per_layer: float
-    weight_reuse_s: float        # lifetime demand for weight memory
+    weight_reuse_s: float        # lifetime demand for weight memory (s)
     kv_lifetime_s: float
     act_lifetime_s: float
     l1_read_hz: float
     l2_read_hz: float
 
     def demands(self) -> List[Demand]:
-        """l1_read_hz / l2_read_hz are already per-bank (see module doc)."""
+        """The profile's two cache-level Demands. Frequencies are
+        per-instance Hz (already split over the hierarchy's banks — see
+        class docstring), lifetimes seconds."""
         return [
             Demand(f"{self.arch}:{self.shape}", "L1",
                    self.l1_read_hz, self.act_lifetime_s),

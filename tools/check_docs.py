@@ -1,0 +1,76 @@
+"""Docs CI gate — keeps the guides from rotting.
+
+1. Link check: every relative markdown link in README.md and docs/*.md
+   must resolve to an existing file (anchors are stripped; http(s) and
+   mailto links are skipped).
+2. Snippet execution: every fenced ```python block in
+   docs/query-api.md is executed, in order, in ONE shared namespace
+   against the installed package — the guide's examples are tests.
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+EXECUTED_DOCS = ["docs/query-api.md"]
+
+
+def check_links() -> list:
+    errors = []
+    files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    n = 0
+    for md in files:
+        text = md.read_text()
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:          # pure in-page anchor
+                continue
+            n += 1
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link "
+                              f"-> {target}")
+    print(f"link check: {n} relative links across {len(files)} files, "
+          f"{len(errors)} broken")
+    return errors
+
+
+def run_snippets(rel: str) -> list:
+    md = ROOT / rel
+    blocks = FENCE_RE.findall(md.read_text())
+    ns: dict = {"__name__": "__docs__"}
+    errors = []
+    for i, src in enumerate(blocks, 1):
+        t0 = time.time()
+        try:
+            exec(compile(src, f"{rel}#block{i}", "exec"), ns)
+            print(f"snippet {i}/{len(blocks)} of {rel}: ok "
+                  f"({time.time() - t0:.1f}s)")
+        except Exception as e:                      # noqa: BLE001
+            errors.append(f"{rel} block {i}: {type(e).__name__}: {e}")
+            print(f"snippet {i}/{len(blocks)} of {rel}: FAILED — {e}")
+    return errors
+
+
+def main() -> int:
+    errors = check_links()
+    for rel in EXECUTED_DOCS:
+        errors += run_snippets(rel)
+    if errors:
+        print("\n".join(["", "DOCS CHECK FAILED:"] + errors))
+        return 1
+    print("docs check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
