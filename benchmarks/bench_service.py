@@ -1,0 +1,201 @@
+"""Micro-benchmark: coalesced multi-tenant query execution vs the
+eager single-caller path, on a mixed sweep/match/codesign workload.
+
+    PYTHONPATH=src python benchmarks/bench_service.py [--smoke] [--repeats 1]
+
+Writes results/benchmarks/bench_service.json. The sequential baseline
+is what N tenants get today: each runs its own Session and executes its
+query eagerly, re-evaluating every lattice its neighbours already
+evaluated. The coalesced path queues the same queries on ONE session
+and drains them in a single admission wave (`Session.run_many`): plan
+nodes dedupe by content hash, distinct lattice evaluations union into
+one padded device batch, and the shmoo/codesign grids run once each.
+Results must match the sequential path BIT-FOR-BIT (the executor's
+core invariant); the recorded speedup and the device-call counts gate
+CI. The same workload is also pushed through the JSON compile service
+(`repro.launch.compile_service`) as an end-to-end check of the
+process-level front door.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+SHAPE = "decode_32k"
+
+
+def _workload(smoke: bool):
+    """One mixed wave: per tenant a (distinct but overlapping) sweep, a
+    match with tenant-specific demands over the shared lattice, and a
+    co-design run for the tenant's model — distinct queries that share
+    almost all of their lattice evaluation."""
+    from repro.api import CoDesignQuery, MatchQuery, SweepQuery
+    from repro.core.dse import Demand
+    from repro.workloads.profiler import profile_arch
+
+    archs = ["qwen2-0.5b", "llama3.2-1b", "minicpm-2b"] if smoke else \
+        ["qwen2-0.5b", "llama3.2-1b", "llama3.2-3b", "minicpm-2b",
+         "zamba2-2.7b", "xlstm-1.3b"]
+    nw = (16, 32, 64) if smoke else (16, 32, 64, 128)
+    shared = SweepQuery(cells=("gc2t_nn", "gc2t_osos"),
+                        word_sizes=(16, 32), num_words=nw)
+    queries, kinds = [], []
+    for i, arch in enumerate(archs):
+        # tenant sweeps are PROPER prefixes of the shared lattice's
+        # num_words — never equal to it — so the shared sweep (behind
+        # every match/codesign) must union the remaining configs into
+        # the tenant sweeps' device batch rather than pure-dedupe
+        queries.append(SweepQuery(cells=("gc2t_nn", "gc2t_osos"),
+                                  word_sizes=(16, 32),
+                                  num_words=nw[:2 + i % max(1, len(nw) - 2)]))
+        kinds.append("sweep")
+        queries.append(MatchQuery(
+            (Demand(f"{arch}-act", "L1", 2.0e8 * (1 + i), 2.0e-6),
+             Demand(f"{arch}-kv", "L2", 4.0e8 * (1 + i), 1.0e-3,
+                    capacity_bits=1 << 20)), shared))
+        kinds.append("match")
+        queries.append(CoDesignQuery(
+            profiles=(profile_arch(arch, SHAPE),), sweep=shared,
+            vdd_scales=(0.85, 1.0)))
+        kinds.append("codesign")
+    return queries, kinds
+
+
+def _counted(fn, counter, key):
+    def wrapper(*a, **kw):
+        counter[key] += 1
+        return fn(*a, **kw)
+    return wrapper
+
+
+def collect(repeats: int = 1, smoke: bool = False) -> dict:
+    from repro.api import Session
+    from repro.core import dse_batch
+
+    queries, kinds = _workload(smoke)
+    calls = {"eval_batch": 0, "vdd": 0}
+    orig_eb, orig_vl = dse_batch.evaluate_batch, \
+        dse_batch.evaluate_vdd_lattice
+    dse_batch.evaluate_batch = _counted(orig_eb, calls, "eval_batch")
+    dse_batch.evaluate_vdd_lattice = _counted(orig_vl, calls, "vdd")
+    try:
+        # warm the jitted kernels (power-of-two buckets make these the
+        # same compiled programs both measured paths reuse)
+        Session().run_many(queries)
+
+        def best_of(fn):
+            walls, res = [], None
+            for _ in range(max(1, repeats)):
+                t0 = time.time()
+                res = fn()
+                walls.append(time.time() - t0)
+            return res, min(walls)
+
+        def sequential():
+            marks = dict(calls)
+            out = [Session().run(q) for q in queries]   # isolated tenants
+            return out, {k: calls[k] - marks[k] for k in calls}
+
+        def coalesced():
+            marks = dict(calls)
+            out = Session().run_many(queries)           # one wave
+            return out, {k: calls[k] - marks[k] for k in calls}
+
+        (seq_res, seq_calls), seq_s = best_of(sequential)
+        (co_res, co_calls), co_s = best_of(coalesced)
+    finally:
+        dse_batch.evaluate_batch = orig_eb
+        dse_batch.evaluate_vdd_lattice = orig_vl
+
+    def canon(r):
+        return json.dumps(r.as_dict(), sort_keys=True, default=str)
+
+    identical = all(canon(a) == canon(b) for a, b in zip(seq_res, co_res))
+
+    # end-to-end through the JSON front door (sweep/match only — the
+    # service resolves codesign profiles itself from {arch, shape})
+    from repro.launch.compile_service import CompileService
+    svc = CompileService(wave_size=len(queries))
+    reqs = []
+    for i, (q, kind) in enumerate(zip(queries, kinds)):
+        if kind == "sweep":
+            spec = {"type": "sweep", "cells": list(q.cells),
+                    "word_sizes": list(q.word_sizes),
+                    "num_words": list(q.num_words)}
+        elif kind == "match":
+            spec = {"type": "match",
+                    "demands": [{"name": d.name, "level": d.level,
+                                 "read_freq_hz": d.read_freq_hz,
+                                 "lifetime_s": d.lifetime_s,
+                                 "capacity_bits": d.capacity_bits}
+                                for d in q.demands],
+                    "sweep": {"cells": list(q.sweep.cells),
+                              "word_sizes": list(q.sweep.word_sizes),
+                              "num_words": list(q.sweep.num_words)}}
+        else:
+            spec = {"type": "codesign",
+                    "profiles": [{"arch": p.arch, "shape": SHAPE}
+                                 for p in q.profiles],
+                    "vdd_scales": list(q.vdd_scales),
+                    "sweep": {"cells": list(q.sweep.cells),
+                              "word_sizes": list(q.sweep.word_sizes),
+                              "num_words": list(q.sweep.num_words)}}
+        reqs.append(json.dumps({"id": f"r{i}", "tenant": f"t{i % 3}",
+                                "query": spec}))
+    responses = [json.loads(line) for line in svc.serve_lines(reqs)]
+    service_ok = len(responses) == len(queries) and \
+        all(r["ok"] for r in responses)
+
+    speedup = seq_s / max(co_s, 1e-9)
+    n = len(queries)
+    return {
+        "n_queries": n, "mix": dict((k, kinds.count(k)) for k in set(kinds)),
+        "sequential_wall_s": round(seq_s, 3),
+        "coalesced_wall_s": round(co_s, 3),
+        "sequential_qps": round(n / max(seq_s, 1e-9), 1),
+        "coalesced_qps": round(n / max(co_s, 1e-9), 1),
+        "speedup": round(speedup, 2),
+        "sequential_calls": seq_calls, "coalesced_calls": co_calls,
+        "service_waves": svc.waves,
+        "checks": {
+            "results_bit_identical": identical,
+            # the coalescing claim, in device-call counts: one union
+            # batch + one vdd lattice for the whole wave (evaluate_batch
+            # is itself a thin wrapper over evaluate_vdd_lattice, so its
+            # inner call is subtracted from the direct-vdd count)
+            "coalesced_one_eval_batch": co_calls["eval_batch"] == 1,
+            "coalesced_one_vdd_eval":
+                co_calls["vdd"] - co_calls["eval_batch"] == 1,
+            "coalescing_reduces_calls":
+                sum(co_calls.values()) < sum(seq_calls.values()),
+            "concurrency_speedup": speedup >= 1.2,
+            "service_all_ok": service_ok,
+        },
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workload for CI")
+    ap.add_argument("--out", default="results/benchmarks")
+    args = ap.parse_args()
+    res = collect(args.repeats, args.smoke)
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out, "bench_service.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    print(f"bench_service: {res['n_queries']} queries  "
+          f"sequential {res['sequential_wall_s']}s "
+          f"({res['sequential_qps']} q/s)  coalesced "
+          f"{res['coalesced_wall_s']}s ({res['coalesced_qps']} q/s)  "
+          f"speedup {res['speedup']}x  identical "
+          f"{res['checks']['results_bit_identical']}  calls "
+          f"{res['sequential_calls']} -> {res['coalesced_calls']}")
+    return 0 if all(res["checks"].values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

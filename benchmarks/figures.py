@@ -7,10 +7,10 @@ import time
 
 import numpy as np
 
+from repro.api import Session, SweepQuery
 from repro.core import dse, layout, power, retention, timing
 from repro.core.bank import BankConfig, build_bank
 from repro.core.cells import CELLS, with_write_vt
-from repro.core.compiler import GCRAMCompiler
 from repro.core.spice import devices as dv
 from repro.core.techfile import SYN40
 
@@ -231,7 +231,8 @@ def fig10_shmoo(dryrun_dir="results/dryrun"):
         from repro.configs import ARCH_IDS, get_config
         profiles = [profile_arch(a, s.name) for a in ARCH_IDS
                     for s in get_config(a).shapes()]
-    points = dse.sweep(cells=("gc2t_nn",), wwlls=(False, True))
+    points = list(Session().sweep(
+        SweepQuery(cells=("gc2t_nn",), wwlls=(False, True))).points)
     demands = demands_table(profiles)
     grid = dse.shmoo(points, demands)
     # aggregates the paper reads off the plot:

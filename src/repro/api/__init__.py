@@ -32,20 +32,34 @@ best voltage + best L2 bank at its (possibly different) one — with the
 whole (vdd x lattice x demand) cube batched on device
 (`repro.core.dse_batch`).
 
+Execution is PLANNED, not eager: every query lowers to a small DAG of
+content-hash-keyed evaluation nodes (`repro.api.plan`), and a
+coalescing executor (`repro.api.executor`) runs them — `Session.run`
+is a thin wrapper over `submit(query) -> Future` / `run_many(queries)`,
+which dedupe identical nodes across concurrently submitted queries and
+union distinct lattice evaluations into single padded device batches,
+bit-identical to sequential runs. `Session(store=...)` adds the
+content-addressed on-disk artifact cache (`repro.api.store`), so
+evaluated tables and characterizations survive process restarts;
+`repro.launch.compile_service` serves JSON queries from many tenants
+through one coalescing session.
+
 The legacy entry points (`GCRAMCompiler`, `dse.sweep`,
 `multibank.build_multibank`) remain as thin deprecated shims over this
 API.
 """
+from repro.api.executor import Executor, QueryFuture
 from repro.api.queries import (CoDesignQuery, CompileQuery, MatchQuery,
                                OptimizeQuery, Query, SweepQuery)
 from repro.api.results import (CalibratedTable, CoDesignReport,
                                CompileResult, DesignTable, MatchResult,
                                OptimizeResult, Result)
 from repro.api.session import Session
+from repro.api.store import ArtifactStore
 
 __all__ = [
     "Session", "Query", "CompileQuery", "SweepQuery", "MatchQuery",
     "CoDesignQuery", "OptimizeQuery", "Result", "CompileResult",
     "DesignTable", "CalibratedTable", "MatchResult", "CoDesignReport",
-    "OptimizeResult",
+    "OptimizeResult", "Executor", "QueryFuture", "ArtifactStore",
 ]

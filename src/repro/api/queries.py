@@ -1,11 +1,16 @@
 """Declarative query objects accepted by `repro.api.Session.run`.
 
 Each query is a frozen dataclass (hashable where possible, so sessions
-can memoize whole results) with a `run(session)` hook dispatching to the
-session method that implements it.
+can memoize whole results). Validation lives in `__post_init__`, so an
+invalid query fails AT CONSTRUCTION — before it is submitted, queued,
+serialized or shipped to a compile service — not halfway through a
+session method. The `run(session)` hook remains as the legacy dispatch
+path for user-defined Query subclasses; the built-in queries are
+lowered by the planner (`repro.api.plan`) instead.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
@@ -15,10 +20,12 @@ from repro.core.dse import Demand, lattice_configs
 
 @dataclass(frozen=True)
 class Query:
-    """Base class; subclasses implement run(session) -> Result."""
+    """Base class. Built-in subclasses are planned (repro.api.plan);
+    user-defined subclasses may override run(session) -> Result, which
+    Session.run falls back to when it cannot plan a query."""
 
     def run(self, session):
-        raise NotImplementedError
+        return session.run(self)
 
 
 @dataclass(frozen=True)
@@ -28,10 +35,6 @@ class CompileQuery(Query):
     cfg: BankConfig = BankConfig()
     simulate: bool = False
     solver: str = "jnp"
-
-    def run(self, session):
-        return session.compile(self.cfg, simulate=self.simulate,
-                               solver=self.solver)
 
 
 @dataclass(frozen=True)
@@ -59,12 +62,28 @@ class SweepQuery(Query):
     sim_steps: int = 300
     solver: str = "jnp"
 
+    def __post_init__(self):
+        for f in ("cells", "word_sizes", "num_words", "write_vts",
+                  "wwlls"):
+            object.__setattr__(self, f, tuple(getattr(self, f)))
+        if self.fidelity not in ("analytic", "transient"):
+            raise ValueError(f"unknown SweepQuery fidelity "
+                             f"{self.fidelity!r} (analytic | transient)")
+        if self.solver not in ("jnp", "pallas"):
+            raise ValueError(f"unknown SweepQuery solver {self.solver!r} "
+                             "(jnp | pallas)")
+        if self.fidelity == "transient" and self.solver == "pallas":
+            # the kernel computes in f32; fine for TPU screening sweeps,
+            # but it is NOT the float64 accuracy anchor
+            warnings.warn(
+                "SweepQuery(fidelity='transient', solver='pallas') solves "
+                "in float32 inside the Pallas kernel; calibration numbers "
+                "are screening-grade only (use solver='jnp' for the f64 "
+                "anchor)", stacklevel=2)
+
     def configs(self, tech):
         return lattice_configs(self.cells, self.word_sizes, self.num_words,
                                self.write_vts, self.wwlls, tech=tech)
-
-    def run(self, session):
-        return session.sweep(self)
 
 
 @dataclass(frozen=True)
@@ -76,10 +95,12 @@ class MatchQuery(Query):
     allow_refresh: bool = True
     max_banks: int = 1024
 
-    def run(self, session):
-        return session.match(self.demands, self.sweep,
-                             allow_refresh=self.allow_refresh,
-                             max_banks=self.max_banks)
+    def __post_init__(self):
+        object.__setattr__(self, "demands", tuple(self.demands))
+        dkeys = [f"{d.level}:{d.name}" for d in self.demands]
+        if len(set(dkeys)) != len(dkeys):
+            raise ValueError(f"duplicate demand keys in match: {dkeys} "
+                             "(grid/banks_needed are keyed by level:name)")
 
 
 @dataclass(frozen=True)
@@ -112,8 +133,22 @@ class CoDesignQuery(Query):
     max_banks: int = 1024
     objective: str = "energy"
 
-    def run(self, session):
-        return session.codesign(self)
+    def __post_init__(self):
+        object.__setattr__(self, "profiles", tuple(self.profiles))
+        object.__setattr__(self, "vdd_scales",
+                           tuple(float(v) for v in self.vdd_scales))
+        if self.objective not in ("energy", "area"):
+            raise ValueError(f"unknown CoDesignQuery objective "
+                             f"{self.objective!r} (energy | area)")
+        if not self.profiles:
+            raise ValueError("CoDesignQuery needs >= 1 Profile "
+                             "(see repro.workloads.profiler)")
+        if self.sweep.fidelity != "analytic":
+            raise ValueError(
+                f"vdd_lattice/codesign run the analytic tier only; got "
+                f"SweepQuery(fidelity={self.sweep.fidelity!r}). Calibrate "
+                "a shortlist separately with SweepQuery(fidelity="
+                "'transient').")
 
 
 @dataclass(frozen=True)
@@ -125,6 +160,3 @@ class OptimizeQuery(Query):
     target_freq_hz: Optional[float] = None
     steps: int = 300
     lr: float = 0.02
-
-    def run(self, session):
-        return session.optimize(self)

@@ -5,8 +5,30 @@ A Session binds a TechFile and memoizes work across queries:
   * per-config DesignPoints (shared between sweeps, matches and
     multibank sizing — a MatchQuery after a SweepQuery re-evaluates
     nothing);
-  * whole DesignTables keyed by the (hashable, frozen) SweepQuery;
-  * compiled Reports keyed by (config, simulate, solver).
+  * whole DesignTables keyed by the sweep's LATTICE-SHAPING fields
+    (cells/word_sizes/num_words/write_vts/wwlls + fidelity tier), so
+    sweeps differing only in evaluation knobs (`batched`, an analytic
+    sweep's `sim_steps`/`solver`) share one cached table;
+  * compiled Reports keyed by (config, simulate, solver), match results
+    and co-design reports by their own shaping fields.
+
+Execution is PLAN-THEN-EXECUTE (`repro.api.plan` lowers queries to
+content-hash-keyed node DAGs, `repro.api.executor` runs them):
+
+    s = Session()
+    table = s.run(SweepQuery(...))        # eager surface, planned core
+    futs = [s.submit(q) for q in queries] # async: queue...
+    s.flush()                             # ...drain one coalesced wave
+    results = s.run_many(queries)         # submit + flush + collect
+
+`run` is a thin wrapper over submit/flush, so the eager API and its
+memoization semantics are unchanged — but concurrently submitted
+queries COALESCE: identical plan nodes execute once, and distinct
+lattice-eval nodes union into a single padded device batch. Passing
+`store=` (a directory path or `repro.api.store.ArtifactStore`) adds a
+content-addressed on-disk cache, so evaluated tables and transient
+characterizations survive process restarts and are shared between
+sessions.
 
 Convenience methods (`compile/sweep/match/optimize/evaluate/multibank`)
 mirror the Query objects, so both styles work:
@@ -17,47 +39,96 @@ mirror the Query objects, so both styles work:
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Dict, Iterable, List, Optional
 
-import numpy as np
-
+from repro.api.executor import Executor, QueryFuture
 from repro.api.queries import (CoDesignQuery, CompileQuery, MatchQuery,
                                OptimizeQuery, Query, SweepQuery)
-from repro.api.results import (CalibratedTable, CoDesignReport, CompileResult,
-                               DesignTable, MatchResult, OptimizeResult,
+from repro.api.results import (CalibratedTable, CoDesignReport,
+                               CompileResult, DesignTable, MatchResult,
                                Result)
-from repro.core import compiler as compiler_mod
+from repro.api.store import ArtifactStore
+from repro.api import plan as plan_mod
 from repro.core import dse
-from repro.core import dse_batch
 from repro.core import multibank as mb_mod
 from repro.core.bank import BankConfig
 from repro.core.dse import Demand, DesignPoint
-from repro.core.dse_batch import VddLattice, evaluate_batch, \
-    evaluate_vdd_lattice
-from repro.core.spice import char_batch
+from repro.core.dse_batch import VddLattice
 from repro.core.techfile import SYN40, TechFile
 
 
 class Session:
-    def __init__(self, tech: TechFile = SYN40):
+    def __init__(self, tech: TechFile = SYN40, store=None):
         self.tech = tech
+        self.store: Optional[ArtifactStore] = \
+            ArtifactStore(os.fspath(store)) \
+            if isinstance(store, (str, os.PathLike)) else store
         self._points: Dict[tuple, DesignPoint] = {}
-        self._tables: Dict[SweepQuery, DesignTable] = {}
+        # whole tables keyed by lattice-shaping fields + fidelity tier
+        # (see _table_key) — NOT by the full query, so evaluation knobs
+        # don't fragment the cache
+        self._tables: Dict[tuple, DesignTable] = {}
         self._reports: Dict[tuple, CompileResult] = {}
         # per-config transient characterizations, keyed by
         # (config key, sim_steps, solver) — shared between overlapping
         # transient-fidelity sweeps exactly like the analytic points
         self._tchars: Dict[tuple, object] = {}
-        # (sweep query, vdd_scales) -> VddLattice, and whole co-design
-        # reports keyed by the (hashable, frozen) CoDesignQuery
+        # (lattice fields, vdd_scales) -> VddLattice; match results and
+        # co-design reports by their shaping fields (_match_key /
+        # _codesign_key)
         self._vlattices: Dict[tuple, VddLattice] = {}
-        self._codesigns: Dict[CoDesignQuery, CoDesignReport] = {}
+        self._matches: Dict[tuple, MatchResult] = {}
+        self._codesigns: Dict[tuple, CoDesignReport] = {}
+        self._executor = Executor(self)
 
     # ------------------------------------------------------------------
-    def run(self, query: Query) -> Result:
-        """Execute any Query; returns its Result."""
-        return query.run(self)
+    # planned execution surface
+    # ------------------------------------------------------------------
+    @property
+    def executor(self) -> Executor:
+        return self._executor
 
+    def run(self, query: Query) -> Result:
+        """Execute any Query; returns its Result. Planned queries go
+        plan -> (coalescing) execute -> compose; a Query subclass
+        overriding run(session) — even a subclass of a built-in query —
+        keeps its legacy eager hook."""
+        if type(query).run is not Query.run:
+            return query.run(self)         # legacy subclass hook
+        if not plan_mod.plannable(query):
+            raise TypeError(
+                f"cannot plan query of type {type(query).__name__} and "
+                "it overrides no run(session) hook")
+        return self._executor.run_one(query)
+
+    def submit(self, query: Query) -> QueryFuture:
+        """Queue a query; returns a Future. Queued queries drain in one
+        coalesced admission wave at the next flush() (or implicitly at
+        the first Future.result()). Legacy run()-override queries can't
+        coalesce; they execute eagerly and return a resolved future."""
+        if type(query).run is not Query.run:
+            fut = QueryFuture(self._executor, query)
+            try:
+                fut._set(result=query.run(self))
+            except Exception as e:                       # noqa: BLE001
+                fut._set(error=e)
+            return fut
+        return self._executor.submit(query)
+
+    def run_many(self, queries: Iterable[Query]) -> List[Result]:
+        """Submit every query and drain them in ONE coalesced wave;
+        results come back in input order, bit-identical to sequential
+        run() calls."""
+        futs = [self.submit(q) for q in queries]
+        self.flush()
+        return [f.result() for f in futs]
+
+    def flush(self) -> None:
+        self._executor.flush()
+
+    # ------------------------------------------------------------------
+    # config keys and adoption
     # ------------------------------------------------------------------
     def _adopt(self, cfg: BankConfig) -> BankConfig:
         """Configs evaluated through a session use the session's tech."""
@@ -70,6 +141,81 @@ class Session:
         return (cfg.word_size, cfg.num_words, cfg.cell, cfg.write_vt,
                 cfg.wwlls, cfg.wwl_boost)
 
+    def _cfg_from_key(self, key: tuple) -> BankConfig:
+        ws, nw, cell, write_vt, wwlls, boost = key
+        return BankConfig(int(ws), int(nw), cell=cell, write_vt=write_vt,
+                          wwlls=bool(wwlls), wwl_boost=float(boost),
+                          tech=self.tech)
+
+    # ------------------------------------------------------------------
+    # result-level cache (lattice-shaping keys only)
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _lattice_key(sweep: SweepQuery) -> tuple:
+        return (sweep.cells, sweep.word_sizes, sweep.num_words,
+                sweep.write_vts, sweep.wwlls)
+
+    @classmethod
+    def _table_key(cls, sweep: SweepQuery) -> tuple:
+        base = cls._lattice_key(sweep)
+        if sweep.fidelity == "transient":
+            return base + ("transient", sweep.sim_steps, sweep.solver)
+        return base + ("analytic",)
+
+    @classmethod
+    def _match_key(cls, q: MatchQuery) -> tuple:
+        return (q.demands, cls._table_key(q.sweep), q.allow_refresh,
+                q.max_banks)
+
+    @classmethod
+    def _codesign_key(cls, q: CoDesignQuery) -> tuple:
+        return (q.profiles, cls._lattice_key(q.sweep), q.vdd_scales,
+                q.allow_refresh, q.max_banks, q.objective)
+
+    @staticmethod
+    def _vlattice_key(sweep: SweepQuery, vdd_scales) -> tuple:
+        return Session._lattice_key(sweep) + \
+            (tuple(float(v) for v in vdd_scales),)
+
+    def _result_cache_get(self, query: Query) -> Optional[Result]:
+        if isinstance(query, SweepQuery):
+            return self._tables.get(self._table_key(query))
+        if isinstance(query, MatchQuery):
+            return self._matches.get(self._match_key(query))
+        if isinstance(query, CoDesignQuery):
+            return self._codesigns.get(self._codesign_key(query))
+        if isinstance(query, CompileQuery):
+            cfg = self._adopt(query.cfg)
+            return self._reports.get(
+                (self._key(cfg), query.simulate, query.solver))
+        return None        # OptimizeQuery: uncached, as before
+
+    def _result_cache_put(self, query: Query, result: Result) -> None:
+        if isinstance(query, SweepQuery):
+            self._tables.setdefault(self._table_key(query), result)
+        elif isinstance(query, MatchQuery):
+            self._matches.setdefault(self._match_key(query), result)
+        elif isinstance(query, CoDesignQuery):
+            self._codesigns.setdefault(self._codesign_key(query), result)
+        # CompileQuery results land in _reports inside the compile node
+
+    def _table_from_points(self, query: SweepQuery, points,
+                           chars=None) -> DesignTable:
+        """Build (or return the cached) table for an evaluated lattice —
+        the compose step of SweepQuery plans."""
+        tkey = self._table_key(query)
+        hit = self._tables.get(tkey)
+        if hit is not None:
+            return hit
+        if query.fidelity == "transient":
+            table = CalibratedTable(list(points), query, list(chars))
+        else:
+            table = DesignTable(list(points), query)
+        self._tables[tkey] = table
+        return table
+
+    # ------------------------------------------------------------------
+    # eager convenience surface (thin wrappers over run())
     # ------------------------------------------------------------------
     def compile(self, cfg: Optional[BankConfig] = None, *, simulate=False,
                 solver="jnp", **cfg_kw) -> CompileResult:
@@ -77,11 +223,8 @@ class Session:
         Accepts a BankConfig or BankConfig kwargs."""
         cfg = self._adopt(cfg if cfg is not None
                           else BankConfig(tech=self.tech, **cfg_kw))
-        key = (self._key(cfg), simulate, solver)
-        if key not in self._reports:
-            self._reports[key] = compiler_mod.compile_bank(
-                cfg, simulate=simulate, solver=solver)
-        return self._reports[key]
+        return self._executor.run_one(CompileQuery(cfg, simulate=simulate,
+                                                   solver=solver))
 
     def evaluate(self, cfg: BankConfig) -> DesignPoint:
         """Scalar-evaluate (and cache) one config."""
@@ -96,56 +239,12 @@ class Session:
 
         fidelity="analytic" returns a DesignTable; fidelity="transient"
         additionally runs the topology-grouped batched transient engine
-        over every gain-cell point and returns a CalibratedTable."""
-        if query.fidelity not in ("analytic", "transient"):
-            raise ValueError(f"unknown SweepQuery fidelity "
-                             f"{query.fidelity!r} (analytic | transient)")
-        if query.solver not in ("jnp", "pallas"):
-            raise ValueError(f"unknown SweepQuery solver {query.solver!r} "
-                             "(jnp | pallas)")
-        if query.fidelity == "transient" and query.solver == "pallas":
-            # the kernel computes in f32; fine for TPU screening sweeps,
-            # but it is NOT the float64 accuracy anchor
-            import warnings
-            warnings.warn(
-                "SweepQuery(fidelity='transient', solver='pallas') solves "
-                "in float32 inside the Pallas kernel; calibration numbers "
-                "are screening-grade only (use solver='jnp' for the f64 "
-                "anchor)", stacklevel=2)
-        if query in self._tables:
-            return self._tables[query]
-        cfgs = query.configs(self.tech)
-        keys = [self._key(c) for c in cfgs]
-        missing, seen = [], set()
-        for c, k in zip(cfgs, keys):
-            if k not in self._points and k not in seen:
-                missing.append(c)
-                seen.add(k)
-        if missing:
-            pts = evaluate_batch(missing) if query.batched \
-                else [dse.evaluate(c) for c in missing]
-            for c, p in zip(missing, pts):
-                self._points[self._key(c)] = p
-        points = [self._points[k] for k in keys]
-        if query.fidelity == "transient":
-            tkeys = [(k, query.sim_steps, query.solver) for k in keys]
-            todo, seen = [], set()
-            for c, tk in zip(cfgs, tkeys):
-                if tk not in self._tchars and tk not in seen:
-                    todo.append(c)
-                    seen.add(tk)
-            if todo:
-                chars = char_batch.characterize(
-                    todo, n_steps=query.sim_steps, solver=query.solver)
-                for c, ch in zip(todo, chars):
-                    self._tchars[(self._key(c), query.sim_steps,
-                                  query.solver)] = ch
-            table = CalibratedTable(points, query,
-                                    [self._tchars[tk] for tk in tkeys])
-        else:
-            table = DesignTable(points, query)
-        self._tables[query] = table
-        return table
+        over every gain-cell point and returns a CalibratedTable.
+
+        Goes straight to the planned path (NOT through run()'s
+        subclass-override dispatch), so a legacy subclass whose run()
+        hook delegates here cannot recurse."""
+        return self._executor.run_one(query)
 
     def match(self, demands: Iterable[Demand],
               sweep: SweepQuery = SweepQuery(), *, allow_refresh=True,
@@ -153,41 +252,9 @@ class Session:
         """Shmoo the lattice against demands; for every demand also size
         an interleaved multibank macro (paper: multi-banked GCRAM serves
         the aggregate L2 request stream no single bank can)."""
-        demands = list(demands)
-        dkeys = [f"{d.level}:{d.name}" for d in demands]
-        if len(set(dkeys)) != len(dkeys):
-            raise ValueError(f"duplicate demand keys in match: {dkeys} "
-                             "(grid/banks_needed are keyed by level:name)")
-        table = self.sweep(sweep)
-        # one device program over the whole (points x demands) grid —
-        # bit-for-bit with the scalar dse.shmoo loop it replaced
-        grid = dse_batch.shmoo_batch(table.points, demands,
-                                     allow_refresh=allow_refresh)
-        fastest = table.best("f_max_hz")
-        rows, banks = [], {}
-        for d in demands:
-            key = f"{d.level}:{d.name}"
-            feas = table.feasible(d, allow_refresh=allow_refresh)
-            # densest single bank if one works, else the fastest bank tiled
-            pick = max(feas, key=lambda p: p.cfg.bits / p.area_um2) \
-                if len(feas) else fastest
-            n = mb_mod.banks_needed(pick, d, capacity_bits=d.capacity_bits,
-                                    max_banks=max_banks,
-                                    allow_refresh=allow_refresh) \
-                if pick is not None else max_banks + 1
-            banks[key] = n
-            rows.append({
-                "demand": key, "read_freq_hz": d.read_freq_hz,
-                "lifetime_s": d.lifetime_s,
-                "capacity_bits": d.capacity_bits,
-                "n_feasible": len(feas),
-                # n > max_banks is banks_needed's infeasibility sentinel:
-                # even a max_banks-wide macro cannot serve this demand
-                "macro_feasible": n <= max_banks,
-                "banks_needed": n,
-                "bank": pick.as_dict() if pick is not None else None,
-            })
-        return MatchResult(grid, rows, banks, table)
+        return self._executor.run_one(
+            MatchQuery(tuple(demands), sweep,
+                       allow_refresh=allow_refresh, max_banks=max_banks))
 
     def multibank(self, cfg: BankConfig, n_banks: int) -> "mb_mod.MultiBankPoint":
         """Compose an N-bank interleaved macro around a (cached) bank."""
@@ -205,92 +272,19 @@ class Session:
                 f"SweepQuery(fidelity={sweep.fidelity!r}). Calibrate a "
                 "shortlist separately with SweepQuery(fidelity="
                 "'transient').")
-        # key on the lattice-shaping fields only, so sweeps differing in
-        # evaluation knobs (batched, sim_steps, solver) share the table
-        key = (sweep.cells, sweep.word_sizes, sweep.num_words,
-               sweep.write_vts, sweep.wwlls,
-               tuple(float(v) for v in vdd_scales))
-        if key not in self._vlattices:
-            self._vlattices[key] = evaluate_vdd_lattice(
-                sweep.configs(self.tech), key[-1])
-        return self._vlattices[key]
+        # same node execution as a CoDesignQuery plan: keyed on the
+        # lattice-shaping fields only (evaluation knobs share the
+        # table), consulting and populating the artifact store
+        return self._executor.eval_vdd_lattice(
+            plan_mod.vdd_lattice_node(self, sweep, vdd_scales))
 
     def codesign(self, query: CoDesignQuery) -> CoDesignReport:
         """Workload -> memory co-design: per profiled workload, pick the
-        best (config, operating voltage) for each cache level and size
-        its interleaved macro — the whole (vdd x lattice x demand) cube
-        is evaluated device-batched (repro.core.dse_batch), never with
-        the scalar per-pair loop."""
-        if query.objective not in ("energy", "area"):
-            raise ValueError(f"unknown CoDesignQuery objective "
-                             f"{query.objective!r} (energy | area)")
-        if not query.profiles:
-            raise ValueError("CoDesignQuery needs >= 1 Profile "
-                             "(see repro.workloads.profiler)")
-        if query in self._codesigns:
-            return self._codesigns[query]
-        lat = self.vdd_lattice(query.sweep, query.vdd_scales)
-        demands, steps = [], []
-        for prof in query.profiles:
-            for d in prof.demands():
-                demands.append(d)
-                steps.append(prof.step_time_s)
-        feas, banks, energy, macro_ok = dse_batch.codesign_metrics(
-            lat, demands, steps, allow_refresh=query.allow_refresh,
-            max_banks=query.max_banks)
-        _, P = lat.shape
-        plans, j = [], 0
-        for prof in query.profiles:
-            levels = {}
-            for d in prof.demands():
-                # a level is plannable if SOME interleaved macro serves it
-                # (banks_needed tiles past a single bank's f_max, exactly
-                # like MatchQuery's fastest-bank fallback)
-                ok = macro_ok[:, :, j]
-                entry = {"read_freq_hz": d.read_freq_hz,
-                         "lifetime_s": d.lifetime_s,
-                         "capacity_bits": d.capacity_bits,
-                         "n_feasible": int(feas[:, :, j].sum()),
-                         "n_macro_feasible": int(ok.sum()),
-                         "feasible": bool(ok.any())}
-                if entry["feasible"]:
-                    score = energy[:, :, j] if query.objective == "energy" \
-                        else banks[:, :, j] * lat.area_um2[None, :]
-                    vi, pi = divmod(int(np.argmin(
-                        np.where(ok, score, np.inf))), P)
-                    n = int(banks[vi, pi, j])
-                    dp = lat.point(vi, pi)
-                    macro = mb_mod.compose_multibank(dp, n)
-                    entry.update(
-                        bank=dp.as_dict(),
-                        vdd_scale=float(lat.vdd_scales[vi]),
-                        vdd_v=self.tech.vdd * float(lat.vdd_scales[vi]),
-                        banks_needed=n,
-                        macro_area_um2=macro.area_um2,
-                        macro_capacity_bits=macro.capacity_bits,
-                        macro_f_max_hz=macro.f_max_hz,
-                        standby_w=n * dp.standby_w,
-                        energy_per_inference_j=float(energy[vi, pi, j]))
-                levels[d.level] = entry
-                j += 1
-            okl = [e for e in levels.values() if e["feasible"]]
-            plans.append({
-                "workload": f"{prof.arch}:{prof.shape}",
-                "kind": prof.kind, "step_time_s": prof.step_time_s,
-                "feasible": len(okl) == len(levels),
-                "total_area_um2": sum(e["macro_area_um2"] for e in okl),
-                "total_energy_per_inference_j":
-                    sum(e["energy_per_inference_j"] for e in okl),
-                "levels": levels,
-            })
-        report = CoDesignReport(plans, query, lat)
-        self._codesigns[query] = report
-        return report
+        best (config, voltage) per L1/L2 demand and size its interleaved
+        macro; the whole (vdd x lattice x demand) cube is evaluated
+        device-batched (repro.core.dse_batch)."""
+        return self._executor.run_one(query)
 
     def optimize(self, query: OptimizeQuery = OptimizeQuery()
-                 ) -> OptimizeResult:
-        res = dse.grad_optimize(
-            query.cell, target_ret_s=query.target_ret_s,
-            target_freq_hz=query.target_freq_hz, steps=query.steps,
-            lr=query.lr, tech=self.tech)
-        return OptimizeResult(res, query)
+                 ) -> "Result":
+        return self._executor.run_one(query)

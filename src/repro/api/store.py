@@ -1,0 +1,116 @@
+"""Content-addressed on-disk artifact cache for planned query execution.
+
+Plan nodes (see `repro.api.plan`) are keyed by a content hash of
+`(kind, tech hash, lattice-shaping payload)`, so a node's key names its
+result as much as its work. This store persists those results —
+evaluated lattice points, transient characterizations, (vdd x lattice)
+tables — as JSON files keyed by node key, letting tables and
+characterizations survive process restarts: many sessions (or a fleet
+of compile-service workers sharing a directory) pay each lattice once.
+
+Layout: `<root>/<kind>/<hash>.json`, one artifact per file, each
+wrapped as `{"key", "sha256", "data"}`. The sha256 covers the canonical
+JSON of `data`; `get()` verifies it and treats any unreadable,
+unparsable or checksum-failing entry as a miss (counted in `corrupt`),
+so a torn write or bit-rot degrades to recompute, never to a wrong
+result. Writes go through a temp file + `os.replace`, so concurrent
+readers and writers only ever see whole artifacts. Floats round-trip
+exactly through JSON (shortest-repr), so a store hit is bit-identical
+to the evaluation it replaced; non-finite values use the Python
+`json` extensions (Infinity/NaN), which this module both writes and
+reads.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+
+__all__ = ["ArtifactStore"]
+
+
+def _digest(data) -> str:
+    blob = json.dumps(data, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+class ArtifactStore:
+    """Directory-backed artifact cache. Thread/process-safe for the
+    single-writer-per-key pattern the executor uses (atomic renames);
+    hit/miss/corruption counters are per-instance, not persisted."""
+
+    def __init__(self, root: str):
+        self.root = str(root)
+        self.hits = 0
+        self.misses = 0
+        self.puts = 0
+        self.corrupt = 0
+
+    def _path(self, key: str) -> str:
+        kind, _, h = key.partition("-")
+        return os.path.join(self.root, kind, (h or "misc") + ".json")
+
+    def has(self, key: str) -> bool:
+        return os.path.exists(self._path(key))
+
+    def get(self, key: str):
+        """The artifact for `key`, or None on miss OR corruption (the
+        caller recomputes either way). Corrupt entries are unlinked so
+        the recompute's put() repairs the store in place."""
+        path = self._path(key)
+        if not os.path.exists(path):
+            self.misses += 1
+            return None
+        try:
+            with open(path) as f:
+                blob = json.load(f)
+            data = blob["data"]
+            if blob.get("sha256") != _digest(data):
+                raise ValueError("artifact checksum mismatch")
+        except (OSError, ValueError, KeyError, TypeError):
+            self.corrupt += 1
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+            return None
+        self.hits += 1
+        return data
+
+    def put(self, key: str, data) -> None:
+        """Persist `data` (JSON-able) under `key`, atomically."""
+        path = self._path(key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        blob = {"key": key, "sha256": _digest(data), "data": data}
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(blob, f)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        self.puts += 1
+
+    def drop(self, key: str) -> None:
+        """Remove an entry the caller found unusable (e.g. it decodes
+        against a different artifact schema), counting it corrupt so a
+        recompute's put() can repair the store in place."""
+        self.corrupt += 1
+        try:
+            os.unlink(self._path(key))
+        except OSError:
+            pass
+
+    def __len__(self) -> int:
+        n = 0
+        for _, _, files in os.walk(self.root):
+            n += sum(f.endswith(".json") for f in files)
+        return n
+
+    def stats(self) -> dict:
+        return {"root": self.root, "entries": len(self),
+                "hits": self.hits, "misses": self.misses,
+                "puts": self.puts, "corrupt": self.corrupt}

@@ -52,6 +52,25 @@ from repro.core.spice import devices as dv
 from repro.core.techfile import with_vdd_scale
 
 
+def pow2_bucket(n: int, floor: int = 4) -> int:
+    """Smallest power-of-two >= n, floored at `floor` — the shared
+    batch-bucketing rule: jitted programs specialize on array shapes,
+    so batches of varying size land in a handful of buckets and reuse
+    the compiled program. Shared with `core.spice.char_batch`."""
+    return max(floor, 1 << max(0, n - 1).bit_length())
+
+
+def pad_bucket(a: np.ndarray, bucket: int) -> np.ndarray:
+    """Edge-repeat `a` along axis 0 up to `bucket` rows (no-op when
+    already there). Padded rows are dropped by the caller's slice-back,
+    so bucketing is value-transparent."""
+    n = a.shape[0]
+    if bucket <= n:
+        return a
+    return np.concatenate([a, np.repeat(a[-1:], bucket - n, axis=0)],
+                          axis=0)
+
+
 def topology_key(cfg: BankConfig) -> tuple:
     """Cell-topology grouping key: configs sharing it have identical cell
     electricals and (for the transient pipeline) identical critical-path
@@ -235,19 +254,29 @@ def _eval_group_arrays(cfgs: List[BankConfig], banks,
         if is_gc else np.broadcast_to(i_cell[:, None] > 0.0,
                                       (len(consts), len(banks))).copy()
 
+    # pad the lattice axis to a power-of-two bucket (edge-repeat) so the
+    # jitted kernel is reused across group sizes: vmap shapes are
+    # static, and both session sweeps and the coalescing executor
+    # (repro.api.executor) hand this path varying-size unions of
+    # "missing" configs. Same bucketing pattern as char_batch/engine;
+    # the algebra is elementwise per point, so padding (and batch
+    # composition generally) cannot perturb any point's value.
+    P = len(banks)
+    Pp = pow2_bucket(P)
+    pad = lambda a: pad_bucket(a, Pp)
     with enable_x64():
         kernel = _group_kernel(is_gc, wwlls, float(dv_sense),
                                tech.sa_delay_s, tech.dff_delay_s,
                                tech.stage_delay_s)
-        parrs = [jnp.asarray(a, jnp.float64) for a in
+        parrs = [jnp.asarray(pad(a), jnp.float64) for a in
                  (rows, wl[:, 0], wl[:, 1], bl[:, 0], bl[:, 1], t_dec, ws,
                   bits, periph)]
-        mux = jnp.asarray(has_mux)
+        mux = jnp.asarray(pad(has_mux))
         varrs = [jnp.asarray(a, jnp.float64) for a in
                  (vdd_v, i_cell, i_leak1, t_ret, t_sn, clpb)]
         t_read, t_write, f, leakage, refresh, e_read, e_write = \
             kernel(*varrs, *parrs, mux)
-    out = {k: np.asarray(a) for k, a in
+    out = {k: np.asarray(a)[:, :P] for k, a in
            (("t_read", t_read), ("t_write", t_write), ("f", f),
             ("leakage", leakage), ("refresh", refresh),
             ("e_read", e_read), ("e_write", e_write))}

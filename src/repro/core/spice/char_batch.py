@@ -52,7 +52,8 @@ from jax.experimental import enable_x64
 
 from repro.core import timing as timing_mod
 from repro.core.bank import BankConfig, build_bank
-from repro.core.dse_batch import group_by_topology, topology_key
+from repro.core.dse_batch import (group_by_topology, pad_bucket,
+                                  pow2_bucket, topology_key)
 from repro.core.spice.transient import Transient, crossing_time
 
 _PIPE_CACHE_MAX = 32     # compiled-pipeline entries kept (FIFO eviction)
@@ -159,10 +160,9 @@ def _characterize_group(cfgs: List[BankConfig], banks, *, n_seg: int,
     # lattice program is reused across characterizations of different
     # sizes — vmap shapes are static, and session sweeps routinely hand
     # this pipeline varying-size "missing" subsets
-    Bp = max(4, 1 << (B - 1).bit_length())
+    Bp = pow2_bucket(B)
     if Bp > B:
-        pad = lambda a: np.concatenate(
-            [a, np.repeat(a[-1:], Bp - B, axis=0)], axis=0)
+        pad = lambda a: pad_bucket(a, Bp)
         G_b, C_b, wt, wv = map(pad, (G_b, C_b, wt, np.asarray(wv)))
         t_end_p = pad(t_end)
     else:

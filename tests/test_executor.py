@@ -1,0 +1,427 @@
+"""Planned query execution: plan lowering, coalescing executor
+(submit/run_many), bit-exactness vs the sequential eager path, future
+error propagation, the on-disk artifact store, and the compile
+service front end."""
+import dataclasses
+import glob
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import (ArtifactStore, CoDesignQuery, CompileQuery,
+                       MatchQuery, Session, SweepQuery)
+from repro.api import plan as plan_mod
+from repro.core import dse_batch
+from repro.core.bank import BankConfig
+from repro.core.dse import Demand
+from repro.core.spice import char_batch
+from repro.core.techfile import SYN40
+from repro.workloads.profiler import profile_arch
+
+SMALL = SweepQuery(cells=("gc2t_nn", "gc2t_osos"),
+                   word_sizes=(16, 32), num_words=(16, 32))
+GROWN = dataclasses.replace(SMALL, num_words=(16, 32, 64))
+PROF = profile_arch("qwen2-0.5b", "decode_32k")
+
+
+def _mixed_queries():
+    return [
+        SMALL,
+        GROWN,
+        MatchQuery((Demand("act", "L1", 3.0e8, 2.0e-6),
+                    Demand("kv", "L2", 8.0e8, 1.0e-3,
+                           capacity_bits=1 << 20)), SMALL),
+        CoDesignQuery(profiles=(PROF,), sweep=SMALL,
+                      vdd_scales=(0.85, 1.0)),
+    ]
+
+
+def _canon(result):
+    return json.dumps(result.as_dict(), sort_keys=True, default=str)
+
+
+def _count_evals(monkeypatch):
+    calls = {"batch": 0, "vdd": 0, "char": 0}
+    orig_b, orig_v = dse_batch.evaluate_batch, \
+        dse_batch.evaluate_vdd_lattice
+    orig_c = char_batch.characterize
+    monkeypatch.setattr(dse_batch, "evaluate_batch",
+                        lambda *a, **k: (calls.__setitem__(
+                            "batch", calls["batch"] + 1), orig_b(*a, **k))[1])
+    monkeypatch.setattr(dse_batch, "evaluate_vdd_lattice",
+                        lambda *a, **k: (calls.__setitem__(
+                            "vdd", calls["vdd"] + 1), orig_v(*a, **k))[1])
+    monkeypatch.setattr(char_batch, "characterize",
+                        lambda *a, **k: (calls.__setitem__(
+                            "char", calls["char"] + 1), orig_c(*a, **k))[1])
+    return calls
+
+
+# ---------------------------------------------------------------------------
+# tentpole: coalesced run_many == sequential run, with shared work
+# executing ONCE
+# ---------------------------------------------------------------------------
+
+def test_run_many_bit_identical_to_sequential_on_mixed_batch():
+    seq = [Session().run(q) for q in _mixed_queries()]
+    coal = Session().run_many(_mixed_queries())
+    for a, b in zip(seq, coal):
+        assert _canon(a) == _canon(b)
+    # point-level floats are EXACTLY equal, not approximately
+    for pa, pb in zip(seq[0].points, coal[0].points):
+        assert pa.f_max_hz == pb.f_max_hz
+        assert pa.leakage_w == pb.leakage_w
+        assert pa.t_read_s == pb.t_read_s
+
+
+def test_concurrent_queries_share_one_lattice_evaluation(monkeypatch):
+    calls = _count_evals(monkeypatch)
+    s = Session()
+    futs = [s.submit(q) for q in
+            [SMALL, SMALL, GROWN,
+             MatchQuery((Demand("d", "L1", 1e6, 1e-9),), SMALL)]]
+    assert not any(f.done() for f in futs)
+    s.flush()
+    assert all(f.done() for f in futs)
+    # SMALL+SMALL dedupe to one node; GROWN's extra configs union into
+    # the SAME padded device batch; the match rides the shared node
+    assert calls["batch"] == 1
+    # dedup extends to the result objects themselves
+    assert futs[0].result() is futs[1].result()
+    assert futs[3].result().table is futs[0].result()
+
+
+def test_run_many_matches_eager_call_counts(monkeypatch):
+    calls = _count_evals(monkeypatch)
+    Session().run_many(_mixed_queries())
+    assert calls["batch"] == 1            # one union batch for the wave
+    assert calls["vdd"] - calls["batch"] == 1   # one codesign lattice
+
+
+def test_duplicate_queries_in_one_wave_share_result_objects():
+    s = Session()
+    m = MatchQuery((Demand("d", "L1", 1e6, 1e-9),), SMALL)
+    c = CoDesignQuery(profiles=(PROF,), sweep=SMALL,
+                      vdd_scales=(0.85, 1.0))
+    rm1, rm2, rc1, rc2 = s.run_many([m, m, c, c])
+    assert rm1 is rm2 and rc1 is rc2     # same identity as sequential
+    assert s.run(m) is rm1
+
+
+def test_submit_result_flushes_lazily():
+    s = Session()
+    fut = s.submit(SMALL)
+    assert not fut.done()
+    table = fut.result()                  # implicit flush
+    assert fut.done() and len(table) == len(SMALL.configs(s.tech))
+    assert s.run(SMALL) is table          # result-level memoization
+
+
+def test_transient_sweeps_coalesce_characterization(monkeypatch):
+    calls = _count_evals(monkeypatch)
+    tq1 = SweepQuery(cells=("gc2t_nn",), word_sizes=(16,),
+                     num_words=(16,), wwlls=(False,),
+                     fidelity="transient", sim_steps=120)
+    tq2 = dataclasses.replace(tq1, num_words=(16, 32))
+    s = Session()
+    r1, r2 = s.run_many([tq1, tq2])
+    assert calls["char"] == 1             # union of both lattices
+    assert r1.transient[0] is r2.transient[0]
+    ref = Session().run(tq1)
+    assert _canon(ref) == _canon(r1)
+
+
+# ---------------------------------------------------------------------------
+# futures: error propagation stays per-query
+# ---------------------------------------------------------------------------
+
+def test_future_error_propagation_is_isolated(monkeypatch):
+    s = Session()
+    s.run(SMALL)                          # cache SMALL's points
+    def boom(cfgs, *a, **k):
+        raise RuntimeError("device fell over")
+    monkeypatch.setattr(dse_batch, "evaluate_batch", boom)
+    fresh = SweepQuery(cells=("gc2t_np",), word_sizes=(16,),
+                       num_words=(16, 32))
+    ok_match = MatchQuery((Demand("d", "L1", 1e6, 1e-9),), SMALL)
+    f_bad, f_ok = s.submit(fresh), s.submit(ok_match)
+    s.flush()
+    assert isinstance(f_bad.exception(), RuntimeError)
+    with pytest.raises(RuntimeError, match="device fell over"):
+        f_bad.result()
+    # the failing node resolves only its dependents; the rest completes
+    assert f_ok.exception() is None
+    assert f_ok.result().banks_needed["L1:d"] == 1
+    # run_many surfaces the first failure
+    with pytest.raises(RuntimeError):
+        s.run_many([fresh])
+
+
+def test_shared_batch_failure_reaches_every_dependent_future(monkeypatch):
+    """A query whose configs were claimed by ANOTHER query's failed
+    union batch must see the real evaluation error, not a KeyError from
+    output assembly."""
+    s = Session()
+    def boom(cfgs, *a, **k):
+        raise RuntimeError("device fell over")
+    monkeypatch.setattr(dse_batch, "evaluate_batch", boom)
+    f_super, f_sub = s.submit(GROWN), s.submit(SMALL)   # SMALL ⊂ GROWN
+    s.flush()
+    assert isinstance(f_super.exception(), RuntimeError)
+    assert isinstance(f_sub.exception(), RuntimeError)
+
+
+def test_eager_vdd_lattice_uses_artifact_store(tmp_path, monkeypatch):
+    calls = _count_evals(monkeypatch)
+    s1 = Session(store=tmp_path)          # pathlib.Path accepted
+    lat = s1.vdd_lattice(SMALL, (0.85, 1.0))
+    assert calls["vdd"] == 1 and s1.store.puts == 1
+    fresh = Session(store=tmp_path)
+    lat2 = fresh.vdd_lattice(SMALL, (0.85, 1.0))
+    assert calls["vdd"] == 1              # served from disk
+    assert np.array_equal(lat.f_max_hz, lat2.f_max_hz)
+    assert np.array_equal(lat.retention_s, lat2.retention_s)
+    # and a codesign query in yet another process rides the same artifact
+    Session(store=tmp_path).run(CoDesignQuery(
+        profiles=(PROF,), sweep=SMALL, vdd_scales=(0.85, 1.0)))
+    assert calls["vdd"] == 1
+
+
+def test_node_failure_inside_execution_reaches_future():
+    s = Session()
+    fut = s.submit(CompileQuery(BankConfig(16, 16, cell="no_such_cell")))
+    assert fut.exception() is not None
+    assert isinstance(fut.exception(), (KeyError, ValueError))
+
+
+# ---------------------------------------------------------------------------
+# construction-time validation (moved out of Session methods)
+# ---------------------------------------------------------------------------
+
+def test_queries_validate_at_construction():
+    with pytest.raises(ValueError, match="fidelity"):
+        SweepQuery(fidelity="spice")
+    with pytest.raises(ValueError, match="solver"):
+        SweepQuery(solver="ngspice")
+    with pytest.raises(ValueError, match="duplicate demand keys"):
+        MatchQuery((Demand("a", "L1", 1e6, 1e-9),
+                    Demand("a", "L1", 2e6, 1e-9)))
+    with pytest.raises(ValueError, match="objective"):
+        CoDesignQuery(profiles=(PROF,), objective="speed")
+    with pytest.raises(ValueError, match="Profile"):
+        CoDesignQuery(profiles=())
+    with pytest.raises(ValueError, match="analytic tier"):
+        CoDesignQuery(profiles=(PROF,),
+                      sweep=dataclasses.replace(SMALL,
+                                                fidelity="transient"))
+    # demands normalize to a tuple so the query stays hashable
+    q = MatchQuery([Demand("a", "L1", 1e6, 1e-9)])
+    assert isinstance(q.demands, tuple) and hash(q)
+
+
+def test_sweep_query_normalizes_sequence_fields():
+    q = SweepQuery(cells=["gc2t_nn"], word_sizes=[16], num_words=[16],
+                   wwlls=[False])
+    assert isinstance(q.cells, tuple) and hash(q)
+    s = Session()
+    # list-built queries flow through caches and waves like tuple ones
+    t1, t2 = s.run_many([q, SweepQuery(cells=("gc2t_nn",),
+                                       word_sizes=(16,), num_words=(16,),
+                                       wwlls=(False,))])
+    assert t1 is t2 and len(t1) == 1
+
+
+def test_legacy_run_override_subclass_keeps_its_hook():
+    class Custom(SweepQuery):
+        def run(self, session):
+            return "custom ran"
+    s = Session()
+    assert s.run(Custom()) == "custom ran"
+    fut = s.submit(Custom())
+    assert fut.done() and fut.result() == "custom ran"
+
+
+def test_legacy_run_override_delegating_to_session_method():
+    """The pre-planned delegation idiom — run(session) calling the
+    session convenience method — must execute, not recurse: the
+    convenience methods go straight to the planned path."""
+    calls = []
+
+    class Traced(SweepQuery):
+        def run(self, session):
+            calls.append(type(self).__name__)
+            return session.sweep(self)
+
+    s = Session()
+    q = Traced(cells=("gc2t_nn",), word_sizes=(16,), num_words=(16,),
+               wwlls=(False,))
+    table = s.run(q)
+    assert len(table) == 1 and calls == ["Traced"]
+
+
+def test_store_schema_mismatch_degrades_to_recompute(tmp_path,
+                                                     monkeypatch):
+    ref = Session(store=str(tmp_path)).run(SMALL)
+    (victim,) = glob.glob(str(tmp_path / "points" / "*.json"))
+    # checksum-VALID artifact whose payload no longer matches the
+    # decoder's schema (e.g. written by a different code version)
+    from repro.api.store import ArtifactStore
+    stale = ArtifactStore(str(tmp_path))
+    key = "points-" + os.path.basename(victim)[:-len(".json")]
+    stale.drop(key)
+    stale.put(key, [{"schema": "from-the-future"}])
+    calls = _count_evals(monkeypatch)
+    fresh = Session(store=str(tmp_path))
+    again = fresh.run(SMALL)
+    assert calls["batch"] == 1 and _canon(ref) == _canon(again)
+    assert fresh.executor.stats["store_decode_errors"] == 1
+    # and the recompute repaired the artifact for the next process
+    calls2 = _count_evals(monkeypatch)
+    assert _canon(Session(store=str(tmp_path)).run(SMALL)) == _canon(ref)
+    assert calls2["batch"] == 0
+
+
+def test_tables_share_across_evaluation_knobs():
+    s = Session()
+    t1 = s.sweep(SMALL)
+    t2 = s.sweep(dataclasses.replace(SMALL, batched=False))
+    assert t1 is t2                       # lattice-shaping key only
+
+
+# ---------------------------------------------------------------------------
+# plan keys
+# ---------------------------------------------------------------------------
+
+def test_plan_keys_are_content_addressed():
+    s = Session()
+    p1 = plan_mod.plan_query(s, SMALL)
+    p2 = plan_mod.plan_query(s, dataclasses.replace(SMALL, batched=False))
+    assert p1.nodes[0].key == p2.nodes[0].key     # knobs stay out
+    p3 = plan_mod.plan_query(s, GROWN)
+    assert p3.nodes[0].key != p1.nodes[0].key     # lattice is in
+    assert p1.nodes[0].key.startswith("points-")
+    assert plan_mod.tech_hash(SYN40) == plan_mod.tech_hash(
+        dataclasses.replace(SYN40))
+
+
+# ---------------------------------------------------------------------------
+# on-disk artifact store
+# ---------------------------------------------------------------------------
+
+def test_store_round_trip_bit_identical(tmp_path, monkeypatch):
+    calls = _count_evals(monkeypatch)
+    first = Session(store=str(tmp_path)).run_many(_mixed_queries())
+    assert calls["batch"] >= 1 and calls["vdd"] >= 1
+    populated = dict(calls)
+    fresh = Session(store=str(tmp_path))
+    again = fresh.run_many(_mixed_queries())
+    # a fresh process recomputes NOTHING device-side...
+    assert dict(calls) == populated
+    assert fresh.executor.stats["store_hits"] >= 2
+    # ...and gets bit-identical results
+    for a, b in zip(first, again):
+        assert _canon(a) == _canon(b)
+
+
+def test_store_corrupted_entry_falls_back_to_recompute(tmp_path,
+                                                       monkeypatch):
+    ref = Session(store=str(tmp_path)).run(SMALL)
+    (victim,) = glob.glob(str(tmp_path / "points" / "*.json"))
+    with open(victim, "w") as f:
+        f.write('{"data": "torn wri')
+    calls = _count_evals(monkeypatch)
+    fresh = Session(store=str(tmp_path))
+    again = fresh.run(SMALL)
+    assert calls["batch"] == 1            # recomputed, not trusted
+    assert fresh.store.corrupt == 1
+    assert _canon(ref) == _canon(again)
+    # the recompute repaired the store for the next session
+    calls2 = _count_evals(monkeypatch)
+    final = Session(store=str(tmp_path)).run(SMALL)
+    assert calls2["batch"] == 0 and _canon(final) == _canon(ref)
+
+
+def test_store_checksum_and_miss_accounting(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    assert store.get("points-nope") is None and store.misses == 1
+    store.put("points-abc", {"x": [1.5, float("inf")]})
+    assert store.get("points-abc") == {"x": [1.5, float("inf")]}
+    # checksum tamper -> corrupt, treated as miss
+    path = store._path("points-abc")
+    blob = json.load(open(path))
+    blob["data"]["x"][0] = 2.5
+    json.dump(blob, open(path, "w"))
+    assert store.get("points-abc") is None and store.corrupt == 1
+    # corrupt entries self-heal by unlinking, clearing the way for a put
+    assert not store.has("points-abc")
+    assert len(store) == 0 and store.stats()["puts"] == 1
+
+
+# ---------------------------------------------------------------------------
+# compile service front end
+# ---------------------------------------------------------------------------
+
+def test_compile_service_waves_and_error_isolation():
+    from repro.launch.compile_service import CompileService
+    svc = CompileService(wave_size=8)
+    reqs = [
+        {"id": "a", "tenant": "t1",
+         "query": {"type": "sweep", "cells": ["gc2t_nn"],
+                   "word_sizes": [16, 32], "num_words": [16, 32]}},
+        {"id": "b", "tenant": "t2",
+         "query": {"type": "match",
+                   "demands": [{"name": "d", "level": "L1",
+                                "read_freq_hz": 1e6,
+                                "lifetime_s": 1e-9}],
+                   "sweep": {"cells": ["gc2t_nn"],
+                             "word_sizes": [16, 32],
+                             "num_words": [16, 32]}}},
+        {"id": "c", "tenant": "t2", "query": {"type": "sweep",
+                                              "fidelity": "spice"}},
+        {"id": "d", "tenant": "t1", "query": {"type": "warp"}},
+    ]
+    lines = list(svc.serve_lines(json.dumps(r) for r in reqs))
+    out = {r["id"]: r for r in map(json.loads, lines)}
+    assert out["a"]["ok"] and out["a"]["result"]["n_points"] == 8
+    assert out["b"]["ok"] and \
+        out["b"]["result"]["banks_needed"]["L1:d"] == 1
+    assert not out["c"]["ok"] and "fidelity" in out["c"]["error"]
+    assert not out["d"]["ok"] and "unknown query type" in out["d"]["error"]
+    assert all(r["wave"] == 0 for r in out.values())
+    st = svc.stats()
+    assert st["tenants"]["t2"] == {"requests": 2, "errors": 1}
+    assert st["executor"]["queries"] == 2   # only the two valid plans
+
+
+def test_compile_service_stream_drains_partial_waves():
+    """A live producer that sends fewer than wave_size requests (and
+    keeps the stream open a while) still gets its responses after the
+    idle window — no EOF or full wave needed."""
+    import time as _time
+    from repro.launch.compile_service import CompileService
+    svc = CompileService(wave_size=64)
+    req = {"id": "slow", "tenant": "t",
+           "query": {"type": "sweep", "cells": ["gc2t_nn"],
+                     "word_sizes": [16], "num_words": [16]}}
+
+    def producer():
+        yield json.dumps(req)
+        _time.sleep(0.3)                  # stream stays open, queue idle
+        yield json.dumps(dict(req, id="late"))
+
+    got = []
+    for line in svc.serve_stream(producer(), max_wait_s=0.02):
+        got.append(json.loads(line))
+    assert [r["id"] for r in got] == ["slow", "late"]
+    assert all(r["ok"] for r in got)
+    assert got[0]["wave"] < got[1]["wave"]   # drained as partial waves
+
+
+def test_compile_service_bad_json_line():
+    from repro.launch.compile_service import CompileService
+    svc = CompileService(wave_size=4)
+    lines = list(svc.serve_lines(["{not json"]))
+    (resp,) = map(json.loads, lines)
+    assert not resp["ok"] and "bad request line" in resp["error"]

@@ -1,0 +1,105 @@
+"""Persistent artifact-cache CI gate.
+
+Runs the same mixed query set twice against one on-disk artifact store
+(`repro.api.store.ArtifactStore`) in two separate processes:
+
+    PYTHONPATH=src python tools/check_store.py --dir /tmp/s --phase populate
+    PYTHONPATH=src python tools/check_store.py --dir /tmp/s --phase verify
+
+`populate` runs on a fresh store and asserts artifacts were written.
+`verify` runs in a NEW process and asserts the session recomputed
+NOTHING device-side (zero lattice evaluations; every plan node was
+served from the store) while producing the identical results — the
+restart-survival contract of the content-addressed store.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _queries():
+    from repro.api import CoDesignQuery, MatchQuery, SweepQuery
+    from repro.core.dse import Demand
+    from repro.workloads.profiler import profile_arch
+    sweep = SweepQuery(cells=("gc2t_nn", "gc2t_osos"),
+                       word_sizes=(16, 32), num_words=(16, 32))
+    return [
+        sweep,
+        MatchQuery((Demand("act", "L1", 3.0e8, 2.0e-6),
+                    Demand("kv", "L2", 8.0e8, 1.0e-3,
+                           capacity_bits=1 << 20)), sweep),
+        CoDesignQuery(profiles=(profile_arch("qwen2-0.5b", "decode_32k"),),
+                      sweep=sweep, vdd_scales=(0.85, 1.0)),
+    ]
+
+
+def _run(store_dir: str):
+    from repro.api import Session
+    from repro.core import dse_batch
+    calls = {"n": 0}
+    orig_eb = dse_batch.evaluate_batch
+    orig_vl = dse_batch.evaluate_vdd_lattice
+
+    def count(fn):
+        def wrapper(*a, **kw):
+            calls["n"] += 1
+            return fn(*a, **kw)
+        return wrapper
+
+    dse_batch.evaluate_batch = count(orig_eb)
+    dse_batch.evaluate_vdd_lattice = count(orig_vl)
+    try:
+        s = Session(store=store_dir)
+        results = s.run_many(_queries())
+    finally:
+        dse_batch.evaluate_batch = orig_eb
+        dse_batch.evaluate_vdd_lattice = orig_vl
+    digest = [json.dumps(r.as_dict(), sort_keys=True, default=str)
+              for r in results]
+    return s, calls["n"], digest
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", required=True)
+    ap.add_argument("--phase", choices=("populate", "verify"),
+                    required=True)
+    args = ap.parse_args()
+    s, n_evals, digest = _run(args.dir)
+    store = s.store
+    print(f"{args.phase}: {n_evals} lattice evaluations, "
+          f"store {store.stats()}")
+    digest_path = f"{args.dir}/.digest"
+    if args.phase == "populate":
+        if store.puts == 0 or len(store) == 0:
+            print("FAIL: populate wrote no artifacts")
+            return 1
+        with open(digest_path, "w") as f:
+            json.dump(digest, f)
+        return 0
+    # verify: a fresh process must serve everything from the store
+    errors = []
+    if n_evals != 0:
+        errors.append(f"recomputed {n_evals} lattice evaluations")
+    if store.hits == 0:
+        errors.append("no store hits")
+    if store.corrupt:
+        errors.append(f"{store.corrupt} corrupt artifacts")
+    try:
+        with open(digest_path) as f:
+            if json.load(f) != digest:
+                errors.append("results differ from populate phase")
+    except OSError as e:
+        errors.append(f"missing populate digest: {e}")
+    if errors:
+        print("FAIL: " + "; ".join(errors))
+        return 1
+    print("persistent cache check passed (bit-identical, zero "
+          "recompute)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
