@@ -1,0 +1,221 @@
+"""Micro-benchmark: adaptive voltage governor vs every fixed operating
+point, on MEASURED serving telemetry.
+
+    PYTHONPATH=src python benchmarks/bench_runtime.py
+    PYTHONPATH=src python benchmarks/bench_runtime.py --smoke   # CI
+
+Writes results/benchmarks/BENCH_runtime.json. Three deterministic
+traffic scenarios replay on a warm device-mode ServeEngine:
+
+  chat_burst    bursts of parallel chats separated by near-idle windows
+                — the governor's home turf (ride the rail down when
+                quiet, jump up for bursts)
+  batch_offline sustained full-batch decode — a constant-rate stress
+                where the governor should park at one rung and match
+                (not beat by switching) the best fixed point
+  long_context  few long-prompt requests, high KV residency per token
+                — retention/refresh bookkeeping dominates
+
+Each scenario runs TWICE: a plain engine and a telemetry-instrumented
+one (same seed). The instrumented run must produce BIT-IDENTICAL greedy
+streams and the SAME host-sync counts — the tentpole's zero-overhead
+claim, checked here on real traffic, not a mock.
+
+Per scenario the telemetry windows become macro `Traffic` (the governed
+macro is the L2 KV-cache store; its rate is the measured KV byte
+stream), a fresh `VddGovernor` walks the gc2t_np voltage ladder, and
+every fixed rung replays the same windows under the SAME headroom
+admission rule (an inadmissible window prices a fixed rung at +inf: a
+pinned deployment would have dropped requests or lost data there —
+see repro/runtime/governor.py). The governor must strictly beat every
+fixed rung on TOTAL energy across all three scenarios.
+
+Time is virtual (1 model step = 1 us) so measured KV read rates land
+inside the gc2t_np f_max span and replays are deterministic.
+
+Checks recorded (the PR's acceptance bar):
+  * greedy_parity        — instrumented streams == plain streams
+  * zero_extra_syncs     — instrumented host/admit sync counts == plain
+  * governor_beats_fixed — governor total energy < every fixed rung's
+  * measured_codesign    — measured windows flow through
+                           Session.codesign_measured end to end
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+
+LADDER = (0.5, 0.6, 0.7, 0.8, 0.9, 1.0, 1.1)
+STEP_TIME_S = 1e-6
+
+
+def _scenarios(smoke: bool):
+    from repro.runtime import Phase, Scenario
+    chat_cycles = 1 if smoke else 2
+    chat = []
+    for c in range(chat_cycles):
+        chat += [Phase(f"burst{c}", 4, 24, 24, 7),
+                 Phase(f"quiet{c}a", 1, 6, 8, 8),
+                 Phase(f"quiet{c}b", 0, 0, 0, 8)]
+    return [
+        Scenario("chat_burst", tuple(chat)),
+        Scenario("batch_offline", (Phase("fill", 8, 32, 28, 7),
+                                   Phase("steady", 0, 0, 0, 7),
+                                   Phase("drain", 0, 0, 0, 4),
+                                   Phase("drain2", 0, 0, 0, 4))),
+        Scenario("long_context", (Phase("admit", 2, 40, 20, 6),
+                                  Phase("steady", 2, 40, 20, 6),
+                                  Phase("tail", 1, 40, 12, 6))),
+    ]
+
+
+def _drain_counters(eng):
+    """(host_syncs, admit_syncs) deltas work because engines are reused
+    across scenarios: record absolutes, diff per scenario."""
+    return eng.host_syncs, eng.admit_syncs
+
+
+def collect(smoke: bool = False) -> dict:
+    import dataclasses
+
+    import jax
+    from repro.api import Session
+    from repro.api.queries import SweepQuery
+    from repro.configs import get_config
+    from repro.models.model import Model
+    from repro.runtime import (GovernorPolicy, TelemetryCollector,
+                               VddGovernor, replay_fixed, run_scenario,
+                               traffic_from_window)
+    from repro.serving import ServeEngine
+
+    cfg = dataclasses.replace(get_config("llama3.2-1b").reduced(),
+                              dtype="float32", n_layers=2, d_model=32,
+                              n_heads=4, n_kv_heads=4, head_dim=8, d_ff=64)
+    params = Model(cfg).init(jax.random.key(0))
+    kw = dict(n_slots=4, window=64, mode="device", decode_chunk=4)
+    plain = ServeEngine(cfg, params, **kw)
+    col = TelemetryCollector(step_time_s=STEP_TIME_S)
+    inst = ServeEngine(cfg, params, telemetry=col, **kw)
+
+    scen_windows = {}
+    parity = True
+    zero_extra = True
+    rid = 0
+    for sc in _scenarios(smoke):
+        p0, i0 = _drain_counters(plain), _drain_counters(inst)
+        plain.done, inst.done = [], []
+        run_scenario(plain, sc, seed=17, rid_base=rid)
+        wins = run_scenario(inst, sc, seed=17, collector=col, rid_base=rid)
+        rid += sum(ph.n_requests for ph in sc.phases)
+        ps = {r.rid: list(r.out_tokens) for r in plain.done}
+        ws = {r.rid: list(r.out_tokens) for r in inst.done}
+        parity &= ps == ws and len(ps) > 0
+        dp = tuple(a - b for a, b in zip(_drain_counters(plain), p0))
+        di = tuple(a - b for a, b in zip(_drain_counters(inst), i0))
+        zero_extra &= dp == di
+        scen_windows[sc.name] = wins
+
+    # the governed macro: one gc2t_np 64x64 config across the vdd ladder
+    sess = Session()
+    lat = sess.vdd_lattice(
+        SweepQuery(cells=("gc2t_np",), word_sizes=(64,), num_words=(64,),
+                   wwlls=(False,)), LADDER)
+    policy = GovernorPolicy()
+    traffics = {name: [traffic_from_window(w, cfg) for w in wins]
+                for name, wins in scen_windows.items()}
+    peak = max(t.read_hz for ts in traffics.values() for t in ts)
+    n_banks = math.ceil(policy.headroom * peak / float(lat.f_max_hz[-1, 0]))
+
+    per_scenario = {}
+    gov_total = 0.0
+    fixed_totals = {v: 0.0 for v in LADDER}
+    for name, ts in traffics.items():
+        gov = VddGovernor(lat, 0, n_banks, policy)
+        for t in ts:
+            gov.observe(t)
+        fixed = {v: replay_fixed(lat, 0, n_banks, ts, vi, policy)
+                 for vi, v in enumerate(LADDER)}
+        gov_total += gov.total_energy_j
+        for v in LADDER:
+            fixed_totals[v] += fixed[v]
+        adm_fixed = {v: e for v, e in fixed.items() if math.isfinite(e)}
+        best_v, best_e = min(adm_fixed.items(), key=lambda kv: kv[1]) \
+            if adm_fixed else (None, float("inf"))
+        per_scenario[name] = {
+            "windows": len(ts),
+            "peak_read_hz": max(t.read_hz for t in ts),
+            "rungs": [d.vdd_scale for d in gov.decisions],
+            "switches": sum(d.switched for d in gov.decisions),
+            "governor_j": gov.total_energy_j,
+            "fixed_j": {str(v): (e if math.isfinite(e) else "inadmissible")
+                        for v, e in fixed.items()},
+            "best_fixed": {"vdd": best_v, "energy_j": best_e},
+            "saved_vs_best_fixed":
+                1.0 - gov.total_energy_j / best_e
+                if math.isfinite(best_e) and best_e > 0 else None,
+        }
+
+    beats = all(gov_total < fixed_totals[v] for v in LADDER)
+    finite_fixed = [e for e in fixed_totals.values() if math.isfinite(e)]
+    best_fixed_total = min(finite_fixed) if finite_fixed else float("inf")
+
+    # close the loop: measured windows -> CoDesignQuery -> report
+    all_wins = [w for wins in scen_windows.values() for w in wins
+                if w.decode_steps > 0]
+    report = sess.codesign_measured(
+        all_wins, cfg, sweep=SweepQuery(cells=("gc2t_np", "gc2t_nn")),
+        vdd_scales=LADDER, step_time_s=STEP_TIME_S)
+    codesign_ok = len(report.plans) == len(all_wins) and report.all_feasible
+
+    return {
+        "config": cfg.name,
+        "smoke": smoke,
+        "step_time_s": STEP_TIME_S,
+        "vdd_ladder": list(LADDER),
+        "n_banks": n_banks,
+        "scenarios": per_scenario,
+        "governor_total_j": gov_total,
+        "fixed_totals_j": {str(v): (e if math.isfinite(e) else "inadmissible")
+                           for v, e in fixed_totals.items()},
+        "saved_vs_best_fixed_total":
+            round(1.0 - gov_total / best_fixed_total, 4)
+            if math.isfinite(best_fixed_total) else None,
+        "codesign_workloads": len(report.plans),
+        "checks": {
+            "greedy_parity": parity,
+            "zero_extra_syncs": zero_extra,
+            "governor_beats_fixed": beats,
+            "measured_codesign": codesign_ok,
+        },
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one chat cycle for CI (all checks still apply)")
+    ap.add_argument("--out", default="results/benchmarks")
+    args = ap.parse_args()
+    res = collect(smoke=args.smoke)
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out, "BENCH_runtime.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    saved = res["saved_vs_best_fixed_total"]
+    print(f"bench_runtime: {len(res['scenarios'])} scenarios, "
+          f"{res['n_banks']} banks, governor {res['governor_total_j']:.3e} J"
+          f" vs best fixed "
+          f"{min(e for e in res['fixed_totals_j'].values() if isinstance(e, float)):.3e} J"
+          f" ({saved:.1%} saved)" if saved is not None else
+          "bench_runtime: no admissible fixed point")
+    for name, s in res["scenarios"].items():
+        print(f"  {name:>13}: rungs {s['rungs']} "
+              f"({s['switches']} switches), gov {s['governor_j']:.3e} J, "
+              f"best fixed vdd={s['best_fixed']['vdd']}")
+    print(f"  checks: {res['checks']}")
+    return 0 if all(res["checks"].values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

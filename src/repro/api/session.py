@@ -285,6 +285,30 @@ class Session:
         device-batched (repro.core.dse_batch)."""
         return self._executor.run_one(query)
 
+    def codesign_measured(self, windows, cfg, *,
+                          sweep: SweepQuery = SweepQuery(),
+                          vdd_scales=(0.7, 0.85, 1.0, 1.15),
+                          objective: str = "energy",
+                          arch: Optional[str] = None,
+                          step_time_s: Optional[float] = None,
+                          allow_refresh: bool = True,
+                          max_banks: int = 1024) -> CoDesignReport:
+        """Co-design directly from MEASURED telemetry windows: each
+        window becomes a `repro.runtime.measured_profile` over the model
+        config that produced it, and the list feeds an ordinary
+        CoDesignQuery — the loop from the live engine back into design-
+        space exploration. Passing the plain list (CoDesignQuery
+        normalizes profile lists to tuples) keeps the report cacheable."""
+        from repro.runtime.profile import measured_profile
+        profiles = [measured_profile(w, cfg, arch=arch, shape=f"win{i}",
+                                     step_time_s=step_time_s)
+                    for i, w in enumerate(windows)]
+        return self.run(CoDesignQuery(profiles, sweep=sweep,
+                                      vdd_scales=tuple(vdd_scales),
+                                      objective=objective,
+                                      allow_refresh=allow_refresh,
+                                      max_banks=max_banks))
+
     def optimize(self, query: OptimizeQuery = OptimizeQuery()
                  ) -> "Result":
         return self._executor.run_one(query)

@@ -31,6 +31,9 @@ def main():
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained params from a checkpoint dir")
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--stats", action="store_true",
+                    help="attach the runtime telemetry collector and print "
+                         "the window summary + per-request log")
     args = ap.parse_args()
 
     import jax
@@ -60,9 +63,13 @@ def main():
                                                  jax.random.key(0)))
             print(f"restored params from step {step}")
 
+    collector = None
+    if args.stats:
+        from repro.runtime import TelemetryCollector
+        collector = TelemetryCollector()        # wall clock
     eng = ServeEngine(cfg, params, n_slots=args.slots, window=args.window,
                       mode="host" if args.host_loop else "device",
-                      decode_chunk=args.decode_chunk)
+                      decode_chunk=args.decode_chunk, telemetry=collector)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(Request(
@@ -80,6 +87,19 @@ def main():
           f"steps / {dt:.2f}s ({toks/max(dt,1e-9):.1f} tok/s, "
           f"{eng.host_syncs} host syncs = "
           f"{toks/max(eng.host_syncs,1):.1f} tok/sync, {mode})")
+    if collector is not None:
+        win = collector.snapshot()
+        print(f"[telemetry] {win.decode_steps} decode steps, "
+              f"mean batch {win.mean_batch:.2f}, "
+              f"mean KV rows {win.mean_kv_rows:.1f}, "
+              f"mean queue depth {win.mean_queue_depth:.2f}, "
+              f"{win.prefill_tokens} prefill + {win.decode_tokens} decode "
+              f"tokens over {win.duration_s:.2f}s")
+        print(f"{'rid':>5} {'prompt':>7} {'emitted':>8} "
+              f"{'queue_wait_s':>13} {'service_s':>10}")
+        for st in sorted(eng.request_log, key=lambda s: s.rid):
+            print(f"{st.rid:>5} {st.prompt_len:>7} {st.emitted:>8} "
+                  f"{st.queue_wait_s:>13.4f} {st.service_s:>10.4f}")
     return 0
 
 

@@ -1,4 +1,5 @@
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import Request, RequestStats, ServeEngine
 from repro.serving.sampling import sample_host, sample_tokens
 
-__all__ = ["Request", "ServeEngine", "sample_host", "sample_tokens"]
+__all__ = ["Request", "RequestStats", "ServeEngine", "sample_host",
+           "sample_tokens"]

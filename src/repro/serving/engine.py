@@ -36,10 +36,20 @@ reference: greedy token streams are exactly equal across modes;
 stochastic streams draw from the same top-k support but different rngs
 (see serving/sampling.py). `host_syncs` counts blocking device->host
 transfers in both modes for the bench_serve scoreboard.
+
+Observability: the engine keeps a completed-request log (`request_log`,
+RequestStats entries stamped by the engine clock) and accepts an
+optional duck-typed `telemetry` collector (repro.runtime). Telemetry
+hooks consume ONLY host-side values the engine already reconciled —
+the np token/live arrays pulled once per chunk, host-tracked per-slot
+context lengths, python queue depths — so an attached collector adds
+ZERO device syncs and cannot perturb token streams (asserted in
+tests/test_runtime.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from collections import deque
 from typing import Deque, List, Optional
@@ -61,11 +71,44 @@ class Request:
     top_k: int = 40
     eos_id: Optional[int] = None  # emitting this token stops the request
     out_tokens: Optional[list] = None
+    # engine-stamped lifecycle times (engine clock, seconds)
+    t_submit_s: Optional[float] = None
+    t_admit_s: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestStats:
+    """Lifecycle record of one COMPLETED request, appended to
+    `ServeEngine.request_log` at retire (the engine previously forgot
+    everything but the token stream). Timestamps come from the engine
+    clock — `time.monotonic` by default, or an attached telemetry
+    collector's virtual clock, so deterministic replays yield
+    deterministic stats. In this engine the first token is sampled
+    INSIDE the prefill dispatch, so `t_first_s == t_admit_s`; both are
+    kept because the schema outlives that implementation detail."""
+    rid: int
+    prompt_len: int
+    emitted: int
+    t_submit_s: float
+    t_admit_s: float
+    t_first_s: float
+    t_retire_s: float
+
+    @property
+    def queue_wait_s(self) -> float:
+        return self.t_admit_s - self.t_submit_s
+
+    @property
+    def service_s(self) -> float:
+        """Admission-to-retire residency — the observed data lifetime of
+        the request's KV-cache rows."""
+        return self.t_retire_s - self.t_admit_s
 
 
 class ServeEngine:
     def __init__(self, cfg, params, *, n_slots=4, window=512, mesh=None,
-                 seed=0, mode="device", decode_chunk=8, top_k_max=64):
+                 seed=0, mode="device", decode_chunk=8, top_k_max=64,
+                 telemetry=None, clock=None):
         if mode not in ("device", "host"):
             raise ValueError(f"mode must be 'device' or 'host': {mode!r}")
         self.cfg = cfg
@@ -97,6 +140,19 @@ class ServeEngine:
         # (EOS only shortens it), and run() can skip dispatching chunks
         # in which every slot would sit frozen.
         self._pred = [0] * n_slots
+
+        # --- runtime observability (repro.runtime) ------------------
+        # `telemetry` is duck-typed (TelemetryCollector-shaped); its
+        # hooks receive only host-side data — see module docstring.
+        # The clock defaults to the collector's (virtual clocks make
+        # replays deterministic), else wall time.
+        self.telemetry = telemetry
+        self.clock = clock if clock is not None else \
+            (getattr(telemetry, "clock", None) or time.monotonic)
+        self.request_log: List[RequestStats] = []
+        # host-tracked per-slot context length (KV-cache rows in use),
+        # advanced at admission/reconcile — never read from device
+        self._ctx = [0] * n_slots
 
         # per-slot decode-scan state, device resident. Admission touches
         # only the admitted slots via .at[idx].set so updates queue
@@ -177,7 +233,11 @@ class ServeEngine:
                 f"only (host mode would use the full top_k) — raise "
                 f"ServeEngine(top_k_max=...) for wider sampling")
         req.out_tokens = []
+        req.t_submit_s = self.clock()
         self.queue.append(req)
+        if self.telemetry is not None:
+            self.telemetry.on_submit(req.rid, len(req.prompt),
+                                     len(self.queue))
 
     def _free_slots(self):
         return [i for i, r in enumerate(self.active) if r is None]
@@ -276,21 +336,43 @@ class ServeEngine:
         EOS — the device kernel computes the matching `fin` flag), and
         activate the rest. Both modes MUST run this identically for the
         cross-mode greedy-parity contract to hold."""
+        now = self.clock()
         for i, (slot, req) in enumerate(items):
             t = int(first[i])
             req.out_tokens.append(t)
+            req.t_admit_s = now
             if (len(req.out_tokens) >= req.max_new_tokens
                     or (req.eos_id is not None and t == req.eos_id)):
                 self.done.append(req)      # finished at prefill
+                self._log_done(req, now)
                 continue
             self.active[slot] = req
+            # prefill writes one cache row per backbone position (vlm
+            # prepends patch embeds) — same formula as the host-mode pos
+            self._ctx[slot] = len(req.prompt) + \
+                (self.cfg.n_patches if self.cfg.family == "vlm" else 0)
             self._tok_np[slot, 0] = t
             self._pred[slot] = 1
+        if self.telemetry is not None:
+            self.telemetry.on_admit(
+                len(items), sum(len(r.prompt) for _, r in items),
+                len(self.queue))
+
+    def _log_done(self, req, now):
+        fallback = lambda t: t if t is not None else now
+        st = RequestStats(req.rid, len(req.prompt), len(req.out_tokens),
+                          fallback(req.t_submit_s), fallback(req.t_admit_s),
+                          fallback(req.t_admit_s), now)
+        self.request_log.append(st)
+        if self.telemetry is not None:
+            self.telemetry.on_retire(st)
 
     def _retire(self, slot):
         req = self.active[slot]
         self.active[slot] = None
+        self._ctx[slot] = 0
         self.done.append(req)
+        self._log_done(req, self.clock())
 
     # ------------------------------------------------------------------
     # stepping
@@ -315,15 +397,34 @@ class ServeEngine:
         toks, live = jax.device_get((toks, live))
         self.host_syncs += 1
         toks, live = np.asarray(toks), np.asarray(live)
+        if self.telemetry is not None:
+            # the done mask freezes monotonically inside a chunk, so
+            # per-slot emitted counts are the live-mask column sums —
+            # already on host, no extra sync. The hook runs BEFORE the
+            # retire loop so a virtual clock has advanced past this
+            # chunk when retire timestamps are stamped.
+            em = live.sum(axis=0)
+            rows = [min(self._ctx[s]
+                        + (int(em[s]) if self.active[s] is r else 0),
+                        self.window)
+                    for s, r in enumerate(snapshot) if r is not None]
+            self.telemetry.on_chunk(
+                toks.shape[0],
+                int(sum(int(em[s]) for s, r in enumerate(snapshot)
+                        if r is not None)),
+                rows, len(self.queue))
         for slot, req in enumerate(snapshot):
             if req is None:
                 continue
+            n_app = 0
             for k in range(toks.shape[0]):
                 if not live[k, slot]:
                     break                 # slot froze earlier in the chunk
                 req.out_tokens.append(int(toks[k, slot]))
+                n_app += 1
             if self.active[slot] is not req:
                 continue                  # slot re-admitted since dispatch
+            self._ctx[slot] = min(self._ctx[slot] + n_app, self.window)
             self._tok_np[slot, 0] = req.out_tokens[-1]
             if (len(req.out_tokens) >= req.max_new_tokens
                     or (req.eos_id is not None
@@ -361,12 +462,17 @@ class ServeEngine:
         self.pos = self.pos + 1
         logits_np = np.asarray(jax.device_get(logits), np.float32)
         self.host_syncs += 1
+        if self.telemetry is not None:
+            rows = [min(self._ctx[s] + 1, self.window)
+                    for s, r in enumerate(self.active) if r is not None]
+            self.telemetry.on_chunk(1, len(rows), rows, len(self.queue))
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
             tok = sample_host(logits_np[slot], req.temperature, req.top_k,
                               self.rng)
             req.out_tokens.append(tok)
+            self._ctx[slot] = min(self._ctx[slot] + 1, self.window)
             self._tok_np[slot, 0] = tok
             if (len(req.out_tokens) >= req.max_new_tokens
                     or (req.eos_id is not None and tok == req.eos_id)):

@@ -48,6 +48,7 @@ class TrainConfig:
     max_bad_steps: int = 10
     preempt_at: Optional[int] = None     # test hook: simulate SIGTERM
     log_fn: Callable = print
+    telemetry: Optional[object] = None   # repro.runtime TelemetryCollector
 
 
 class Trainer:
@@ -136,6 +137,10 @@ class Trainer:
                 tc.log_fn(f"[straggler] step {step} took {dt:.3f}s "
                           f"(ewma {ewma:.3f}s)")
             history.append({"step": step, **metrics, "time_s": dt})
+            if tc.telemetry is not None:
+                tc.telemetry.on_train_step(
+                    step, self.shape.global_batch * self.shape.seq_len, dt,
+                    metrics["loss"])
             if step % tc.log_every == 0:
                 tc.log_fn(f"step {step}: loss={metrics['loss']:.4f} "
                           f"lr={metrics['lr']:.2e} "

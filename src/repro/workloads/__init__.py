@@ -1,1 +1,6 @@
-from repro.workloads.profiler import profile_arch, profile_from_dryrun, demands_table
+from repro.workloads.profiler import (demands_table, hierarchy_split,
+                                      profile_arch, profile_config,
+                                      profile_from_dryrun)
+
+__all__ = ["demands_table", "hierarchy_split", "profile_arch",
+           "profile_config", "profile_from_dryrun"]

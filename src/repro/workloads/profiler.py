@@ -35,6 +35,34 @@ import numpy as np
 from repro.core.dse import Demand
 from repro.launch import roofline as rl
 
+# hierarchy shape (H100-class, matching GainSight's profiling target);
+# L1_MISS=0.25: tiled GEMMs reuse operands in L1, attention/streams miss.
+# Module-level so measured profiles (repro.runtime.profile) split their
+# traffic over the SAME hierarchy as the analytic ones.
+N_CORES = 128
+BANKS_PER_CORE = 8
+L2_BANKS = 128
+L1_MISS = 0.25
+REUSE_DEPTH = 64          # operand-reuse window amortizing the L1 feed
+WORD_BYTES = 4.0          # bytes per cache request
+
+
+def hierarchy_split(flops_per_s: float, stream_bytes_per_s: float):
+    """Split one device's compute + HBM-stream rates into PER-INSTANCE
+    L1/L2 read Hz on the profiled hierarchy — the single source of truth
+    for both analytic (`profile_config`) and measured
+    (`repro.runtime.profile.measured_profile`) profiles.
+
+    Operand feed: ~2 words/MAC amortized over a REUSE_DEPTH-deep reuse
+    window; L2 sees the L1 miss stream plus the class (weight/KV/act)
+    stream, divided over the few wide L2 banks — the paper's Fig 9
+    "shared L2 exceeds L1 per-bank rate" effect."""
+    l1_bw = flops_per_s * 2 * 2 / REUSE_DEPTH      # bytes/s on-chip feed
+    l1_per_bank = l1_bw / (N_CORES * BANKS_PER_CORE) / WORD_BYTES
+    l2_per_bank = (L1_MISS * l1_bw + stream_bytes_per_s) / L2_BANKS \
+        / WORD_BYTES
+    return l1_per_bank, l2_per_bank
+
 
 @dataclass(frozen=True)
 class Profile:
@@ -98,43 +126,50 @@ def _bytes_classes(cfg, shape):
     return wb, kv, act
 
 
-def profile_arch(arch: str, shape_name: str,
-                 dryrun_record: Optional[dict] = None) -> Profile:
-    from repro.configs import get_config, SHAPES
-    cfg = get_config(arch)
-    shape = SHAPES[shape_name]
+def profile_config(cfg, shape, *, arch_name: Optional[str] = None,
+                   shape_name: Optional[str] = None, n_devices: int = 256,
+                   step_time_s: Optional[float] = None) -> Profile:
+    """Analytic profile of an explicit (config, shape) on an
+    `n_devices`-way pod. Demands are derived at TARGET efficiency — 50%
+    MFU for train/prefill, HBM-stream-bound for decode — so the memory
+    system is sized for what the accelerator is SUPPOSED to sustain, not
+    for the current software baseline. `step_time_s` overrides the
+    roofline step (used when diffing against MEASURED profiles, which
+    observe a real per-step time)."""
     wb, kvb, act = _bytes_classes(cfg, shape)
-    # Demands are derived at TARGET efficiency — 50% MFU for train/prefill,
-    # HBM-stream-bound for decode — so the memory system is sized for what
-    # the accelerator is SUPPOSED to sustain, not for the current software
-    # baseline (dryrun_record's own step is recorded for reference).
     mf = rl.model_flops_for(cfg, shape)
-    if shape.kind == "decode":
-        step = max((wb + kvb) / 256 / rl.HBM_BW,
-                   mf / (256 * rl.PEAK_FLOPS))
+    if step_time_s is not None:
+        step = float(step_time_s)
+    elif shape.kind == "decode":
+        step = max((wb + kvb) / n_devices / rl.HBM_BW,
+                   mf / (n_devices * rl.PEAK_FLOPS))
     else:
-        step = mf / (256 * rl.PEAK_FLOPS) / 0.5
+        step = mf / (n_devices * rl.PEAK_FLOPS) / 0.5
     L = cfg.n_layers + cfg.n_enc_layers
 
     layer_t = step / max(L, 1)
     decode_session = shape.seq_len * step if shape.kind == "decode" else step
-    # hierarchy shape (H100-class, matching GainSight's profiling target);
-    # MISS=0.25: tiled GEMMs reuse operands in L1, attention/streams miss
-    N_CORES, BANKS_PER_CORE, L2_BANKS, MISS = 128, 8, 128, 0.25
-    flops_dev = rl.model_flops_for(cfg, shape) / 256
-    # operand feed: ~2 words/MAC amortized over a 64-deep reuse window
-    l1_bw = flops_dev / step * 2 * 2 / 64          # bytes/s on-chip feed
-    stream_bw = (wb + kvb + act) / 256 / step      # HBM-side class stream
-    l1_per_bank = l1_bw / (N_CORES * BANKS_PER_CORE) / 4.0
-    l2_per_bank = (MISS * l1_bw + stream_bw) / L2_BANKS / 4.0
+    flops_dev = rl.model_flops_for(cfg, shape) / n_devices
+    stream_bw = (wb + kvb + act) / n_devices / step  # HBM-side class stream
+    l1_per_bank, l2_per_bank = hierarchy_split(flops_dev / step, stream_bw)
     return Profile(
-        arch, shape_name, shape.kind, step, wb, kvb, act / max(L, 1),
+        arch_name or cfg.name, shape_name or shape.name, shape.kind, step,
+        wb, kvb, act / max(L, 1),
         weight_reuse_s=3600.0 * 24,                # weights live for the job
         kv_lifetime_s=decode_session,
         act_lifetime_s=layer_t,
         l1_read_hz=l1_per_bank,
         l2_read_hz=l2_per_bank,
     )
+
+
+def profile_arch(arch: str, shape_name: str,
+                 dryrun_record: Optional[dict] = None) -> Profile:
+    """Profile a registered (arch, shape) pair on the 256-device pod
+    (dryrun_record's own step is recorded for reference only)."""
+    from repro.configs import get_config, SHAPES
+    return profile_config(get_config(arch), SHAPES[shape_name],
+                          arch_name=arch, shape_name=shape_name)
 
 
 def profile_from_dryrun(results_dir: str) -> List[Profile]:

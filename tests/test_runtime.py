@@ -1,0 +1,314 @@
+"""Runtime telemetry + voltage governor: zero-overhead instrumentation
+(bit-identical greedy streams, no extra device syncs), window counter
+exactness on a deterministic replay, measured-vs-analytic profile
+parity, measured profiles through CoDesignQuery, governor policy
+(hysteresis, dwell, forbidden retention points, energy accounting)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ShapeConfig, get_config
+from repro.models.model import Model
+from repro.runtime import (DIFF_FIELDS, GovernorPolicy, Phase, Scenario,
+                           TelemetryCollector, Traffic, VddGovernor,
+                           VirtualClock, diff_profiles, kv_row_bytes,
+                           measured_profile, replay_fixed, run_scenario,
+                           traffic_from_window)
+from repro.serving import Request, ServeEngine
+from repro.workloads import profile_config
+
+STEP_TIME_S = 1e-6
+SCENARIO = Scenario("mixed", (Phase("burst", 4, 40, 16, 5),
+                              Phase("quiet", 1, 6, 8, 8)))
+
+
+def _tiny():
+    cfg = dataclasses.replace(get_config("llama3.2-1b").reduced(),
+                              dtype="float32", n_layers=2, d_model=32,
+                              n_heads=4, n_kv_heads=4, head_dim=8, d_ff=64)
+    return cfg, Model(cfg).init(jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def replayed():
+    """The same scenario on a plain and an instrumented device engine."""
+    cfg, params = _tiny()
+    kw = dict(n_slots=4, window=64, mode="device", decode_chunk=4)
+    plain = ServeEngine(cfg, params, **kw)
+    run_scenario(plain, SCENARIO, seed=0)
+    col = TelemetryCollector(step_time_s=STEP_TIME_S)
+    inst = ServeEngine(cfg, params, telemetry=col, **kw)
+    wins = run_scenario(inst, SCENARIO, seed=0, collector=col)
+    return cfg, plain, inst, wins
+
+
+# ---------------------------------------------------------------------------
+# tentpole claim: instrumentation is free
+# ---------------------------------------------------------------------------
+
+def test_telemetry_zero_extra_syncs_and_greedy_parity(replayed):
+    _, plain, inst, _ = replayed
+    assert (inst.host_syncs, inst.admit_syncs) == \
+        (plain.host_syncs, plain.admit_syncs)
+    ps = {r.rid: list(r.out_tokens) for r in plain.done}
+    ws = {r.rid: list(r.out_tokens) for r in inst.done}
+    assert len(ps) == 5 and ps == ws
+
+
+def test_window_counters_exact(replayed):
+    """Deterministic replay -> exactly predictable counters. Burst phase:
+    4 reqs x (1 prefill + 15 decode) tokens over 4 fused chunks of 4
+    steps = 16 decode steps, 60 decode tokens; every request retires
+    after exactly 16 model steps of residency."""
+    _, _, _, wins = replayed
+    burst, quiet = wins
+    assert burst.decode_steps == 16 and burst.decode_tokens == 60
+    assert burst.n_submitted == burst.n_admitted == burst.n_retired == 4
+    assert burst.prefill_tokens == 4 * 40
+    assert burst.kv_lifetimes_s == pytest.approx((16 * STEP_TIME_S,) * 4)
+    assert burst.duration_s == pytest.approx(20 * STEP_TIME_S)
+    assert burst.mean_batch == pytest.approx(60 / 16)
+    assert dict(burst.batch_hist) == {0: 4, 4: 16}
+    # rows integrate ctx growth 44->56 at chunk boundaries, 4 slots
+    assert burst.mean_kv_rows == pytest.approx(199.0)
+    assert quiet.decode_steps == 8 and quiet.decode_tokens == 7
+    assert quiet.n_admitted == 1 and quiet.prefill_tokens == 6
+    assert quiet.kv_lifetimes_s == pytest.approx((8 * STEP_TIME_S,))
+    assert dict(quiet.batch_hist)[0] >= 1      # idle ticks recorded
+
+
+def test_request_log_wall_clock():
+    cfg, params = _tiny()
+    eng = ServeEngine(cfg, params, n_slots=2, window=64)
+    rng = np.random.default_rng(3)
+    for i in range(4):
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab_size,
+                                               6).astype(np.int32),
+                           max_new_tokens=3))
+    done, _ = eng.run()
+    assert len(eng.request_log) == 4
+    by_rid = {s.rid: s for s in eng.request_log}
+    for r in done:
+        st = by_rid[r.rid]
+        assert st.emitted == len(r.out_tokens) == 3
+        assert st.prompt_len == 6
+        assert st.t_submit_s <= st.t_admit_s == st.t_first_s <= st.t_retire_s
+        assert st.queue_wait_s >= 0 and st.service_s >= 0
+    # 4 requests on 2 slots: the second pair waits for the first
+    assert max(s.queue_wait_s for s in eng.request_log) >= 0.0
+
+
+def test_request_log_finished_at_prefill():
+    cfg, params = _tiny()
+    eng = ServeEngine(cfg, params, n_slots=1, window=32)
+    eng.submit(Request(rid=7, prompt=np.arange(5, dtype=np.int32),
+                       max_new_tokens=1))
+    eng.run()
+    (st,) = eng.request_log
+    assert st.rid == 7 and st.emitted == 1
+    assert st.t_retire_s == st.t_admit_s
+
+
+# ---------------------------------------------------------------------------
+# measured profiles
+# ---------------------------------------------------------------------------
+
+def test_measured_profile_matches_analytic(replayed):
+    """The burst window's measured profile lands within 15% of the
+    analytic decode profile of the same (config, B=4, seq 48) shape on
+    every diffed field — and exactly on step time and weight stream."""
+    cfg, _, _, wins = replayed
+    mp = measured_profile(wins[0], cfg)
+    ap = profile_config(cfg, ShapeConfig("serve", 48, 4, "decode"),
+                        n_devices=1, step_time_s=STEP_TIME_S)
+    dev = diff_profiles(mp, ap)
+    assert set(dev) == set(DIFF_FIELDS)
+    assert dev["step_time_s"] == 0.0
+    assert dev["weights_bytes"] == 0.0
+    assert all(abs(v) < 0.15 for v in dev.values()), dev
+    assert mp.kind == "decode"
+    assert mp.kv_lifetime_s == pytest.approx(16 * STEP_TIME_S)
+    # the Profile is the frozen co-design schema: demands() still works
+    l1, l2 = mp.demands()
+    assert l1.level == "L1" and l2.level == "L2"
+    assert l2.read_freq_hz > 0
+
+
+def test_measured_profile_rejects_bad_windows():
+    col = TelemetryCollector(step_time_s=STEP_TIME_S)
+    cfg, _ = _tiny()
+    with pytest.raises(ValueError, match="empty"):
+        measured_profile(col.snapshot(), cfg)
+    col.on_chunk(4, 4, [10], 0)
+    col.on_train_step(0, 256, 0.1)
+    with pytest.raises(ValueError, match="mixes"):
+        measured_profile(col.snapshot(), cfg)
+
+
+def test_codesign_query_normalizes_profile_list(replayed):
+    """Regression: CoDesignQuery accepts a plain LIST of profiles and
+    normalizes it to a hashable tuple (session memoization keys on it)."""
+    from repro.api import Session
+    from repro.api.queries import CoDesignQuery, SweepQuery
+    cfg, _, _, wins = replayed
+    profiles = [measured_profile(w, cfg, shape=f"win{i}")
+                for i, w in enumerate(wins)]
+    q = CoDesignQuery(profiles, sweep=SweepQuery(cells=("gc2t_np",)))
+    assert isinstance(q.profiles, tuple) and len(q.profiles) == 2
+    hash(q)                                    # memoization key works
+    rep = Session().run(q)
+    assert len(rep.plans) == 2
+    assert rep[f"measured:{cfg.name}:win0"] is rep.plans[0]
+
+
+def test_session_codesign_measured(replayed):
+    from repro.api import Session
+    from repro.api.queries import SweepQuery
+    cfg, _, _, wins = replayed
+    rep = Session().codesign_measured(
+        wins, cfg, sweep=SweepQuery(cells=("gc2t_np", "gc2t_nn")),
+        step_time_s=STEP_TIME_S)
+    assert len(rep.plans) == 2
+    assert rep.all_feasible
+
+
+# ---------------------------------------------------------------------------
+# governor
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lattice():
+    from repro.core.bank import BankConfig
+    from repro.core.dse_batch import evaluate_vdd_lattice
+    cfgs = [BankConfig(64, 64, cell="gc2t_np"),
+            BankConfig(64, 256, cell="gc2t_np")]
+    return evaluate_vdd_lattice(cfgs, (0.5, 0.7, 0.9, 1.1))
+
+
+def test_governor_up_down_dwell(lattice):
+    """First window calibrates the boot rung; bursts up-switch
+    immediately; quiet windows only down-switch after the dwell."""
+    lat = lattice
+    gov = VddGovernor(lat, 0, 2, GovernorPolicy(dwell_windows=1))
+    cap0 = gov.capacity_hz(0)
+    quiet = Traffic(cap0 / 4, 1e-6, 1e-5, cap0 / 4 * 1e-5)
+    burst = Traffic(cap0 * 2, 1e-6, 1e-5, cap0 * 2 * 1e-5)
+    seq = [quiet, burst, quiet, quiet, quiet]
+    vis = [gov.observe(t).vi for t in seq]
+    assert vis[0] == 0                        # boot = first window target
+    assert vis[1] > 0                         # immediate up-switch
+    assert vis[2] == vis[1]                   # dwell holds one window
+    assert vis[3] == 0                        # then steps down
+    assert [d.switched for d in gov.decisions] == \
+        [False, True, False, True, False]
+
+
+def test_governor_hysteresis_band_no_flap(lattice):
+    """Traffic admissible at the low rung with `headroom` but NOT with
+    `down_headroom` margin never pulls the governor down: no flapping at
+    a capacity boundary."""
+    lat = lattice
+    pol = GovernorPolicy(headroom=1.25, down_headroom=1.6)
+    gov = VddGovernor(lat, 0, 2, pol, start_vi=1)
+    cap0 = gov.capacity_hz(0)
+    edge = Traffic(cap0 / 1.4, 1e-6, 1e-5, cap0 / 1.4 * 1e-5)
+    assert gov.admissible(0, edge, margin=pol.headroom)
+    assert gov.capacity_hz(0) < pol.down_headroom * edge.read_hz
+    for _ in range(5):
+        assert gov.observe(edge).vi == 1
+    assert not any(d.switched for d in gov.decisions)
+
+
+def test_forbidden_retention_point(lattice):
+    """gc2t_np 64x256 at vdd 0.5 fails the refresh rule (num_words /
+    retention >= 10% of f_max): the rung is forbidden no matter how low
+    the traffic, and a fixed deployment there prices at +inf."""
+    lat = lattice
+    pi = 1                                     # the 64x256 config
+    ret = float(lat.retention_s[0, pi])
+    assert float(lat.num_words[pi]) / ret >= 0.1 * float(lat.f_max_hz[0, pi])
+    gov = VddGovernor(lat, pi, 1)
+    long_lived = Traffic(1e3, 10 * ret, 1e-5, 1e-2)
+    assert not gov.retention_covers(0, long_lived.lifetime_s)
+    assert not gov.admissible(0, long_lived)
+    assert gov.target(long_lived) != 0        # skips the forbidden rung
+    assert replay_fixed(lat, pi, 1, [long_lived], 0) == float("inf")
+    # the 64x64 config's same rung passes (refresh covers it)
+    gov64 = VddGovernor(lat, 0, 1)
+    assert gov64.retention_covers(0, long_lived.lifetime_s)
+
+
+def test_energy_accounting(lattice):
+    """Hand-check e_dyn/e_leak/e_refresh; refresh energy is charged only
+    when native retention falls short of the observed lifetime."""
+    lat = lattice
+    gov = VddGovernor(lat, 0, 3)
+    ret = float(lat.retention_s[2, 0])
+    short = Traffic(1e6, ret / 2, 1e-4, 100.0)     # retention covers
+    longl = Traffic(1e6, ret * 10, 1e-4, 100.0)    # needs refresh
+    e_dyn, e_leak, e_ref = gov.energy_at(2, short)
+    assert e_dyn == pytest.approx(100.0 * float(lat.e_read_j[2, 0]))
+    assert e_leak == pytest.approx(3 * float(lat.leakage_w[2, 0]) * 1e-4)
+    assert e_ref == 0.0
+    _, _, e_ref2 = gov.energy_at(2, longl)
+    assert e_ref2 == pytest.approx(3 * float(lat.refresh_w[2, 0]) * 1e-4)
+
+
+def test_refresh_interval_lengthens_as_vdd_drops(lattice):
+    """The paper's knob: lower vdd -> longer retention -> longer refresh
+    interval on the gc2t_np (PMOS-read) cell."""
+    gov = VddGovernor(lattice, 0, 1)
+    ivals = [gov.refresh_interval_s(vi) for vi in range(4)]
+    assert ivals[0] > ivals[-1] > 0
+
+
+def test_traffic_from_window(replayed):
+    cfg, _, _, wins = replayed
+    t = traffic_from_window(wins[0], cfg)
+    L = cfg.n_layers + cfg.n_enc_layers
+    expect = L * wins[0].kv_row_steps * kv_row_bytes(cfg) / 8.0
+    assert t.accesses == pytest.approx(expect)
+    assert t.read_hz == pytest.approx(expect / wins[0].duration_s)
+    assert t.lifetime_s == pytest.approx(16 * STEP_TIME_S)
+
+
+# ---------------------------------------------------------------------------
+# clocks + training hook
+# ---------------------------------------------------------------------------
+
+def test_virtual_clock_and_tick():
+    clk = VirtualClock(2.0)
+    assert clk() == 0.0
+    clk.advance(3)
+    assert clk() == 6.0
+    col = TelemetryCollector(step_time_s=0.5)
+    col.tick(4)
+    win = col.snapshot()
+    assert win.duration_s == pytest.approx(2.0)
+    assert dict(win.batch_hist) == {0: 4}
+    assert win.decode_steps == 0
+
+
+def test_training_telemetry(tmp_path):
+    from repro.launch.mesh import make_test_mesh
+    from repro.training import TrainConfig, Trainer
+    cfg = dataclasses.replace(get_config("llama3.2-1b").reduced(),
+                              name="tiny", n_layers=2, dtype="float32")
+    shape = ShapeConfig("tiny_train", 64, 4, "train")
+    col = TelemetryCollector()
+    tr = Trainer(cfg, make_test_mesh(data=1, model=1), shape,
+                 TrainConfig(total_steps=4, ckpt_every=100,
+                             ckpt_dir=str(tmp_path), log_every=100,
+                             log_fn=lambda *a: None, telemetry=col))
+    tr.run()
+    win = col.snapshot()
+    assert win.train_steps == 4
+    assert win.train_tokens == 4 * 64 * 4
+    assert win.train_time_s > 0
+    mp = measured_profile(win, cfg)
+    assert mp.kind == "train" and mp.kv_bytes == 0.0
+    assert mp.weights_bytes == pytest.approx(
+        6.0 * Model(cfg).param_count(active_only=True))

@@ -3,9 +3,9 @@
 1. Link check: every relative markdown link in README.md and docs/*.md
    must resolve to an existing file (anchors are stripped; http(s) and
    mailto links are skipped).
-2. Snippet execution: every fenced ```python block in
-   docs/query-api.md is executed, in order, in ONE shared namespace
-   against the installed package — the guide's examples are tests.
+2. Snippet execution: every fenced ```python block in each
+   EXECUTED_DOCS guide is executed, in order, in ONE shared namespace
+   per guide against the installed package — the examples are tests.
 
     PYTHONPATH=src python tools/check_docs.py
 """
@@ -19,7 +19,7 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
-EXECUTED_DOCS = ["docs/query-api.md"]
+EXECUTED_DOCS = ["docs/query-api.md", "docs/runtime.md"]
 
 
 def check_links() -> list:
