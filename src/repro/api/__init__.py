@@ -49,6 +49,7 @@ The legacy entry points (`GCRAMCompiler`, `dse.sweep`,
 API.
 """
 from repro.api.executor import Executor, QueryFuture
+from repro.api.leases import Lease, LeaseManager
 from repro.api.queries import (CoDesignQuery, CompileQuery, MatchQuery,
                                OptimizeQuery, Query, SweepQuery)
 from repro.api.results import (CalibratedTable, CoDesignReport,
@@ -62,4 +63,5 @@ __all__ = [
     "CoDesignQuery", "OptimizeQuery", "Result", "CompileResult",
     "DesignTable", "CalibratedTable", "MatchResult", "CoDesignReport",
     "OptimizeResult", "Executor", "QueryFuture", "ArtifactStore",
+    "Lease", "LeaseManager",
 ]

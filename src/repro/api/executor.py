@@ -98,7 +98,29 @@ class Executor:
         self._lock = threading.RLock()
         # keys known present in the store (avoids re-stat + re-put)
         self._persisted = set()
+        # keys whose stored artifact this process found corrupt (torn
+        # write, bit-rot, schema mismatch): their recompute is a HEAL,
+        # not a duplicate evaluation — see LeaseManager.log_eval
+        self._healed = set()
         self.stats = Counter()
+
+    # ------------------------------------------------------------------
+    # lease plumbing (fleet mode: session.leases is a LeaseManager)
+    # ------------------------------------------------------------------
+    @property
+    def _leases(self):
+        s = self.session
+        return s.leases if s.store is not None else None
+
+    def _eval_reason(self, lease, key: str) -> str:
+        if lease is not None and lease.stolen:
+            return "steal"
+        return "heal" if key in self._healed else "fresh"
+
+    def _log_eval(self, lease, key: str) -> None:
+        leases = self._leases
+        if leases is not None:
+            leases.log_eval(key, self._eval_reason(lease, key))
 
     # ------------------------------------------------------------------
     # submission API (surfaced as Session.submit / run_many / run)
@@ -208,11 +230,21 @@ class Executor:
         device batch per evaluation mode. Submission order decides which
         node CLAIMS a shared config (and with which mode) — the same
         config the same position in the sequential-run order would have
-        computed it with."""
+        computed it with.
+
+        With a LeaseManager attached (fleet mode), each node whose
+        artifact is missing is first CLAIMED: nodes whose lease a live
+        foreign worker holds are deferred, and only waited on AFTER our
+        own claims are evaluated and published — no worker ever blocks
+        while holding unpublished work, which keeps the lease protocol
+        deadlock-free."""
         s = self.session
+        leases = self._leases
         claims = {True: [], False: []}      # batched? -> [cfg, ...]
         owners = {True: set(), False: set()}  # batched? -> {node key}
         claim_mode = {}                     # cfg key -> claiming mode
+        held = {}                           # node key -> Lease
+        waiting = []                        # [(node, missing)] foreign
         for n in pnodes:
             pkeys = [s._key(c) for c in n.cfgs]
             missing = [(c, k) for c, k in zip(n.cfgs, pkeys)
@@ -226,6 +258,12 @@ class Executor:
                 if pts:
                     missing = [(c, k) for c, k in missing
                                if k not in s._points]
+            if missing and leases is not None:
+                lease = leases.try_claim(n.key)
+                if lease is None:           # live foreign owner: defer
+                    waiting.append((n, missing))
+                    continue
+                held[n.key] = lease
             mode = bool(n.spec.get("batched", True))
             for c, k in missing:
                 if k not in claim_mode:     # dedupe within + across nodes
@@ -254,12 +292,76 @@ class Executor:
             except Exception as e:                       # noqa: BLE001
                 for k in owners[False]:
                     err[k] = e
+        if leases is None:
+            return
+        # publish everything we claimed (artifact first, then release
+        # the lease), THEN wait on the foreign-held nodes
+        for n in pnodes:
+            lease = held.pop(n.key, None)
+            if lease is None:
+                continue
+            try:
+                if n.key not in err:
+                    pts = [s._points[s._key(c)] for c in n.cfgs]
+                    self._store_put(
+                        n.key, lambda: plan_mod.encode_points(s, pts))
+                    self._log_eval(lease, n.key)
+            finally:
+                lease.release()
+        for n, missing in waiting:
+            self._await_points(n, missing, err)
+
+    def _await_points(self, n: Node, missing, err: dict) -> None:
+        """A foreign worker holds this points node's lease: wait for its
+        artifact, or steal the lease once it expires (the owner died
+        mid-flight) and evaluate the node ourselves."""
+        s = self.session
+
+        def have():
+            pts = self._store_decode(n.key, plan_mod.decode_points)
+            if not pts:
+                return None
+            for p in pts:
+                s._points.setdefault(s._key(p.cfg), p)
+            return pts
+
+        try:
+            status, val = self._leases.acquire(n.key, have)
+        except Exception as e:                           # noqa: BLE001
+            err[n.key] = e
+            return
+        if status == "have":
+            return
+        lease = val
+        try:
+            cfgs = [c for c, k in missing if k not in s._points]
+            if cfgs:
+                self.stats["points_evaluated"] += len(cfgs)
+                if bool(n.spec.get("batched", True)):
+                    self.stats["eval_batch_calls"] += 1
+                    pts = dse_batch.evaluate_batch(cfgs)
+                else:
+                    self.stats["scalar_evals"] += len(cfgs)
+                    pts = [dse.evaluate(c) for c in cfgs]
+                for c, p in zip(cfgs, pts):
+                    s._points[s._key(c)] = p
+            allpts = [s._points[s._key(c)] for c in n.cfgs]
+            self._store_put(n.key,
+                            lambda: plan_mod.encode_points(s, allpts))
+            self._log_eval(lease, n.key)
+        except Exception as e:                           # noqa: BLE001
+            err[n.key] = e
+        finally:
+            lease.release()
 
     def _coalesce_transient(self, tnodes: List[Node], err: dict) -> None:
         s = self.session
+        leases = self._leases
         groups: Dict[tuple, list] = {}        # (steps, solver) -> [cfg]
         owners: Dict[tuple, set] = {}
         claimed = set()
+        held = {}                             # node key -> Lease
+        waiting = []                          # [(node, mode)] foreign
         for n in tnodes:
             mode = (n.spec["sim_steps"], n.spec["solver"])
             tkeys = [(s._key(c),) + mode for c in n.cfgs]
@@ -274,6 +376,12 @@ class Executor:
                             s._tchars[tk] = ch
                     missing = [(c, tk) for c, tk in missing
                                if tk not in s._tchars]
+            if missing and leases is not None:
+                lease = leases.try_claim(n.key)
+                if lease is None:             # live foreign owner: defer
+                    waiting.append((n, mode))
+                    continue
+                held[n.key] = lease
             for c, tk in missing:
                 if tk not in claimed:       # dedupe within + across nodes
                     claimed.add(tk)
@@ -292,6 +400,61 @@ class Executor:
             except Exception as e:                       # noqa: BLE001
                 for k in owners[mode]:
                     err[k] = e
+        if leases is None:
+            return
+        for n in tnodes:                      # publish, then wait
+            lease = held.pop(n.key, None)
+            if lease is None:
+                continue
+            try:
+                if n.key not in err:
+                    mode = (n.spec["sim_steps"], n.spec["solver"])
+                    chars = [s._tchars[(s._key(c),) + mode]
+                             for c in n.cfgs]
+                    self._store_put(
+                        n.key, lambda: plan_mod.encode_chars(s, chars))
+                    self._log_eval(lease, n.key)
+            finally:
+                lease.release()
+        for n, mode in waiting:
+            self._await_transient(n, mode, err)
+
+    def _await_transient(self, n: Node, mode: tuple, err: dict) -> None:
+        s = self.session
+
+        def have():
+            chars = self._store_decode(n.key, plan_mod.decode_chars)
+            if not chars:
+                return None
+            for c, ch in zip(n.cfgs, chars):
+                s._tchars.setdefault((s._key(c),) + mode, ch)
+            return chars
+
+        try:
+            status, val = self._leases.acquire(n.key, have)
+        except Exception as e:                           # noqa: BLE001
+            err[n.key] = e
+            return
+        if status == "have":
+            return
+        lease = val
+        try:
+            cfgs = [c for c in n.cfgs
+                    if (s._key(c),) + mode not in s._tchars]
+            if cfgs:
+                self.stats["char_calls"] += 1
+                chars = char_batch.characterize(
+                    cfgs, n_steps=mode[0], solver=mode[1])
+                for c, ch in zip(cfgs, chars):
+                    s._tchars[(s._key(c),) + mode] = ch
+            allchars = [s._tchars[(s._key(c),) + mode] for c in n.cfgs]
+            self._store_put(n.key,
+                            lambda: plan_mod.encode_chars(s, allchars))
+            self._log_eval(lease, n.key)
+        except Exception as e:                           # noqa: BLE001
+            err[n.key] = e
+        finally:
+            lease.release()
 
     # ------------------------------------------------------------------
     # per-node execution
@@ -352,17 +515,38 @@ class Executor:
         sweep, scales = n.spec["sweep"], n.spec["vdd_scales"]
         vkey = s._vlattice_key(sweep, scales)
         lat = s._vlattices.get(vkey)
+        lease = None
         if lat is None:
             lat = self._store_decode(n.key,
                                      plan_mod.decode_vdd_lattice)
+            if lat is None and self._leases is not None:
+                # fleet mode: claim the node (or wait for whoever holds
+                # it to publish; steal if that owner died)
+                status, val = self._leases.acquire(
+                    n.key, lambda: self._store_decode(
+                        n.key, plan_mod.decode_vdd_lattice))
+                if status == "have":
+                    lat = val
+                else:
+                    lease = val
+        try:
             if lat is None:
                 self.stats["vdd_evals"] += 1
                 lat = dse_batch.evaluate_vdd_lattice(
                     sweep.configs(s.tech), scales)
+                s._vlattices[vkey] = lat
+                self._store_put(
+                    n.key, lambda: plan_mod.encode_vdd_lattice(s, lat))
+                if lease is not None:
+                    self._log_eval(lease, n.key)
+                return lat
             s._vlattices[vkey] = lat
-        self._store_put(n.key,
-                        lambda: plan_mod.encode_vdd_lattice(s, lat))
-        return lat
+            self._store_put(n.key,
+                            lambda: plan_mod.encode_vdd_lattice(s, lat))
+            return lat
+        finally:
+            if lease is not None:
+                lease.release()
 
     # ------------------------------------------------------------------
     # store plumbing
@@ -371,10 +555,16 @@ class Executor:
         store = self.session.store
         if store is None:
             return None
+        before = store.corrupt
         data = store.get(key)
         if data is not None:
             self._persisted.add(key)
             self.stats["store_hits"] += 1
+        elif store.corrupt > before:
+            # the entry existed but was torn/bit-rotted: the recompute
+            # that follows is a store HEAL, not a duplicate evaluation
+            self._healed.add(key)
+            self.stats["store_heals"] += 1
         return data
 
     def _store_decode(self, key: str, decode):
@@ -391,6 +581,7 @@ class Executor:
             self.stats["store_hits"] -= 1
             self.stats["store_decode_errors"] += 1
             self._persisted.discard(key)    # the recompute rewrites it
+            self._healed.add(key)           # schema heal, not duplicate
             if s.store is not None:
                 s.store.drop(key)
             return None

@@ -59,11 +59,20 @@ from repro.core.techfile import SYN40, TechFile
 
 
 class Session:
-    def __init__(self, tech: TechFile = SYN40, store=None):
+    def __init__(self, tech: TechFile = SYN40, store=None, leases=None):
         self.tech = tech
         self.store: Optional[ArtifactStore] = \
             ArtifactStore(os.fspath(store)) \
             if isinstance(store, (str, os.PathLike)) else store
+        # lease/claim coordination over the shared store directory so N
+        # concurrent worker processes never duplicate a lattice
+        # evaluation (repro.api.leases): pass a LeaseManager, or True to
+        # build one over the store root. Meaningless without a store.
+        if leases is True:
+            from repro.api.leases import LeaseManager
+            leases = LeaseManager(self.store.root) \
+                if self.store is not None else None
+        self.leases = leases if self.store is not None else None
         self._points: Dict[tuple, DesignPoint] = {}
         # whole tables keyed by lattice-shaping fields + fidelity tier
         # (see _table_key) — NOT by the full query, so evaluation knobs

@@ -26,6 +26,7 @@ import hashlib
 import json
 import os
 import tempfile
+import time
 
 __all__ = ["ArtifactStore"]
 
@@ -46,6 +47,8 @@ class ArtifactStore:
         self.misses = 0
         self.puts = 0
         self.corrupt = 0
+        self.pruned = 0
+        self.swept = 0
 
     def _path(self, key: str) -> str:
         kind, _, h = key.partition("-")
@@ -79,7 +82,10 @@ class ArtifactStore:
         return data
 
     def put(self, key: str, data) -> None:
-        """Persist `data` (JSON-able) under `key`, atomically."""
+        """Persist `data` (JSON-able) under `key`, atomically. The temp
+        file is fsync'd BEFORE the rename: a host crash can leave a
+        stale `.tmp` (swept by `sweep_tmp`) or the old entry, but never
+        a truncated file under the final name."""
         path = self._path(key)
         os.makedirs(os.path.dirname(path), exist_ok=True)
         blob = {"key": key, "sha256": _digest(data), "data": data}
@@ -88,11 +94,56 @@ class ArtifactStore:
         try:
             with os.fdopen(fd, "w") as f:
                 json.dump(blob, f)
+                f.flush()
+                os.fsync(f.fileno())
             os.replace(tmp, path)
         finally:
             if os.path.exists(tmp):
                 os.unlink(tmp)
         self.puts += 1
+
+    def sweep_tmp(self, max_age_s: float = 600.0) -> int:
+        """Unlink `*.tmp` files older than `max_age_s` — the droppings
+        of writers killed between mkstemp and the atomic rename. Safe
+        concurrently: an in-flight writer's temp file is younger than
+        any sane age bound."""
+        cutoff = time.time() - max_age_s
+        swept = 0
+        for dirpath, _, files in os.walk(self.root):
+            for name in files:
+                if not name.endswith(".tmp"):
+                    continue
+                p = os.path.join(dirpath, name)
+                try:
+                    if os.stat(p).st_mtime <= cutoff:
+                        os.unlink(p)
+                        swept += 1
+                except OSError:
+                    pass
+        self.swept += swept
+        return swept
+
+    def prune(self, max_age_s: float) -> int:
+        """Drop artifacts not touched within `max_age_s` (plus stale
+        temp files of the same age) — the retention policy for a
+        long-lived fleet store. Returns the number of entries removed;
+        a pruned entry simply recomputes on next use."""
+        cutoff = time.time() - max_age_s
+        pruned = 0
+        for dirpath, _, files in os.walk(self.root):
+            for name in files:
+                if not name.endswith(".json"):
+                    continue
+                p = os.path.join(dirpath, name)
+                try:
+                    if os.stat(p).st_mtime <= cutoff:
+                        os.unlink(p)
+                        pruned += 1
+                except OSError:
+                    pass
+        self.pruned += pruned
+        self.sweep_tmp(max_age_s)
+        return pruned
 
     def drop(self, key: str) -> None:
         """Remove an entry the caller found unusable (e.g. it decodes
@@ -106,11 +157,14 @@ class ArtifactStore:
 
     def __len__(self) -> int:
         n = 0
-        for _, _, files in os.walk(self.root):
+        for dirpath, _, files in os.walk(self.root):
+            if os.path.basename(dirpath) == "_leases":
+                continue                 # lease/claim files, not artifacts
             n += sum(f.endswith(".json") for f in files)
         return n
 
     def stats(self) -> dict:
         return {"root": self.root, "entries": len(self),
                 "hits": self.hits, "misses": self.misses,
-                "puts": self.puts, "corrupt": self.corrupt}
+                "puts": self.puts, "corrupt": self.corrupt,
+                "pruned": self.pruned, "swept": self.swept}

@@ -41,6 +41,7 @@ import argparse
 import json
 import queue
 import sys
+import threading
 import time
 from typing import Iterable, Iterator, List, Optional
 
@@ -147,10 +148,15 @@ class CompileService:
         self.queue: "queue.Queue[dict]" = queue.Queue()
         self.waves = 0
         self.tenants: dict = {}
+        # notified on every submit (and at EOF) so serve_stream can
+        # wait event-driven instead of busy-polling an idle queue
+        self._arrival = threading.Condition()
 
     # -- request intake ------------------------------------------------
     def submit(self, request: dict) -> None:
         self.queue.put(dict(request))
+        with self._arrival:
+            self._arrival.notify_all()
 
     def submit_line(self, line: str) -> None:
         try:
@@ -199,16 +205,32 @@ class CompileService:
         for req, fut, err in pending:
             tenant = req.get("tenant", "anonymous")
             resp = {"id": req.get("id"), "tenant": tenant, "wave": wave}
+            retryable = False
             if err is None:
                 e = fut.exception()
                 if e is None:
-                    resp["ok"] = True
-                    resp["result"] = fut.result().as_dict()
+                    # result extraction and serialization can raise too
+                    # (a Result whose as_dict trips, a value json can't
+                    # encode): that failure must resolve ONLY this
+                    # request, like every other per-request error path
+                    try:
+                        result = fut.result().as_dict()
+                        json.dumps(result, default=str)
+                        resp["ok"] = True
+                        resp["result"] = result
+                    except Exception as e2:              # noqa: BLE001
+                        err = ("response serialization failed: "
+                               f"{type(e2).__name__}: {e2}")
                 else:
+                    # node/evaluation failures may be transient (a fleet
+                    # dispatcher retries them); parse and serialization
+                    # failures are deterministic and are not
                     err = f"{type(e).__name__}: {e}"
+                    retryable = True
             if err is not None:
                 resp["ok"] = False
                 resp["error"] = err
+                resp["retryable"] = retryable
             self._account(tenant, resp["ok"])
             out.append(resp)
         if out:
@@ -241,8 +263,13 @@ class CompileService:
         long-running tenant, a FIFO): a background reader feeds the
         queue while waves drain as soon as `wave_size` accumulates OR
         the stream goes quiet for `max_wait_s` — a small tenant batch
-        gets its responses without waiting for EOF or a full wave."""
-        import threading
+        gets its responses without waiting for EOF or a full wave.
+
+        Fully event-driven: an idle service BLOCKS on the arrival
+        condition (zero wake-ups, no busy-poll); once a request lands,
+        the admission window is a timed condition wait that ends the
+        moment the wave fills or the stream hits EOF, and is bounded by
+        `max_wait_s` so partial waves still drain on time."""
         eof = threading.Event()
 
         def reader():
@@ -252,16 +279,25 @@ class CompileService:
                         self.submit_line(line)
             finally:
                 eof.set()
+                with self._arrival:
+                    self._arrival.notify_all()
 
         threading.Thread(target=reader, daemon=True).start()
         while True:
-            if self.queue.empty():
-                if eof.is_set():
+            with self._arrival:
+                # idle: sleep until a request (or EOF) arrives
+                while self.queue.empty() and not eof.is_set():
+                    self._arrival.wait()
+                if self.queue.empty() and eof.is_set():
                     break
-                time.sleep(min(max_wait_s, 0.01))
-                continue
-            if self.queue.qsize() < self.wave_size and not eof.is_set():
-                time.sleep(max_wait_s)       # admission window
+                # admission window: gather arrivals until the wave is
+                # full, the producer closes, or max_wait_s elapses
+                deadline = time.monotonic() + max_wait_s
+                while (self.queue.qsize() < self.wave_size
+                       and not eof.is_set()):
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0 or not self._arrival.wait(remaining):
+                        break
             for resp in self.drain():
                 yield json.dumps(resp, default=str)
 
@@ -286,8 +322,13 @@ def main(argv=None) -> int:
                          "a partial wave")
     ap.add_argument("--store", default=None,
                     help="artifact-store directory shared across runs")
+    ap.add_argument("--leases", action="store_true",
+                    help="claim evaluations via file leases on the "
+                         "store directory (run N services against one "
+                         "store without duplicating work)")
     args = ap.parse_args(argv)
-    svc = CompileService(store=args.store, wave_size=args.wave_size)
+    session = Session(store=args.store, leases=args.leases or None)
+    svc = CompileService(session=session, wave_size=args.wave_size)
     src = sys.stdin if args.input == "-" else open(args.input)
     # stdin may be a long-lived pipe: drain partial waves after an idle
     # window so small batches are answered without waiting for EOF

@@ -1,0 +1,5 @@
+"""Deterministic fault-injection harness for chaos tests and the
+fleet benchmark (`repro.testing.faults`)."""
+from repro.testing.faults import FaultInjector, FaultSpec, InjectedFault
+
+__all__ = ["FaultInjector", "FaultSpec", "InjectedFault"]

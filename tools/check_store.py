@@ -11,6 +11,12 @@ Runs the same mixed query set twice against one on-disk artifact store
 NOTHING device-side (zero lattice evaluations; every plan node was
 served from the store) while producing the identical results — the
 restart-survival contract of the content-addressed store.
+
+`--prune SECONDS` is the retention tool for long-lived fleet stores:
+drop artifacts (and stale `*.tmp` droppings of killed writers) older
+than the age bound, then exit:
+
+    PYTHONPATH=src python tools/check_store.py --dir /tmp/s --prune 86400
 """
 from __future__ import annotations
 
@@ -64,9 +70,21 @@ def _run(store_dir: str):
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", required=True)
-    ap.add_argument("--phase", choices=("populate", "verify"),
-                    required=True)
+    ap.add_argument("--phase", choices=("populate", "verify"))
+    ap.add_argument("--prune", type=float, default=None, metavar="SECONDS",
+                    help="drop artifacts (and stale *.tmp files) older "
+                         "than SECONDS, then exit")
     args = ap.parse_args()
+    if args.prune is not None:
+        from repro.api.store import ArtifactStore
+        store = ArtifactStore(args.dir)
+        n = store.prune(args.prune)
+        print(f"prune: removed {n} artifacts older than {args.prune}s, "
+              f"swept {store.swept} stale tmp files; "
+              f"{len(store)} entries remain")
+        return 0
+    if args.phase is None:
+        ap.error("--phase is required unless --prune is given")
     s, n_evals, digest = _run(args.dir)
     store = s.store
     print(f"{args.phase}: {n_evals} lattice evaluations, "
