@@ -16,7 +16,7 @@ as (query, future) pairs and drain in ADMISSION WAVES. One wave:
      grouping and power-of-two bucketing; scalar nodes loop), walked in
      submission order so shared points are computed exactly as a
      sequential `Session.run` series would compute them. `transient`
-     nodes union the same way per (sim_steps, solver).
+     nodes union the same way per (sim_steps, solver, precision).
   4. execute: remaining nodes run dependencies-first, consulting the
      session caches and the on-disk artifact store
      (`repro.api.store`) before any device work, persisting fresh
@@ -357,13 +357,14 @@ class Executor:
     def _coalesce_transient(self, tnodes: List[Node], err: dict) -> None:
         s = self.session
         leases = self._leases
-        groups: Dict[tuple, list] = {}        # (steps, solver) -> [cfg]
+        groups: Dict[tuple, list] = {}  # (steps, solver, precision) -> [cfg]
         owners: Dict[tuple, set] = {}
         claimed = set()
         held = {}                             # node key -> Lease
         waiting = []                          # [(node, mode)] foreign
         for n in tnodes:
-            mode = (n.spec["sim_steps"], n.spec["solver"])
+            mode = (n.spec["sim_steps"], n.spec["solver"],
+                    n.spec.get("precision", "f64"))
             tkeys = [(s._key(c),) + mode for c in n.cfgs]
             missing = [(c, tk) for c, tk in zip(n.cfgs, tkeys)
                        if tk not in s._tchars]
@@ -394,7 +395,8 @@ class Executor:
             self.stats["char_calls"] += 1
             try:
                 chars = char_batch.characterize(
-                    cfgs, n_steps=mode[0], solver=mode[1])
+                    cfgs, n_steps=mode[0], solver=mode[1],
+                    precision=mode[2])
                 for c, ch in zip(cfgs, chars):
                     s._tchars[(s._key(c),) + mode] = ch
             except Exception as e:                       # noqa: BLE001
@@ -408,7 +410,8 @@ class Executor:
                 continue
             try:
                 if n.key not in err:
-                    mode = (n.spec["sim_steps"], n.spec["solver"])
+                    mode = (n.spec["sim_steps"], n.spec["solver"],
+                    n.spec.get("precision", "f64"))
                     chars = [s._tchars[(s._key(c),) + mode]
                              for c in n.cfgs]
                     self._store_put(
@@ -444,7 +447,8 @@ class Executor:
             if cfgs:
                 self.stats["char_calls"] += 1
                 chars = char_batch.characterize(
-                    cfgs, n_steps=mode[0], solver=mode[1])
+                    cfgs, n_steps=mode[0], solver=mode[1],
+                    precision=mode[2])
                 for c, ch in zip(cfgs, chars):
                     s._tchars[(s._key(c),) + mode] = ch
             allchars = [s._tchars[(s._key(c),) + mode] for c in n.cfgs]
@@ -469,7 +473,8 @@ class Executor:
             self._store_put(n.key, lambda: plan_mod.encode_points(s, pts))
             return pts
         if n.kind == "transient":
-            mode = (n.spec["sim_steps"], n.spec["solver"])
+            mode = (n.spec["sim_steps"], n.spec["solver"],
+                    n.spec.get("precision", "f64"))
             chars = [s._tchars[(s._key(c),) + mode] for c in n.cfgs]
             self._store_put(n.key, lambda: plan_mod.encode_chars(s, chars))
             return chars

@@ -151,8 +151,9 @@ def _plan_sweep(session, q: SweepQuery) -> Plan:
         tnode = Node(
             "transient",
             node_key("transient", session.tech,
-                     [pkeys, q.sim_steps, q.solver]),
-            cfgs=cfgs, spec={"sim_steps": q.sim_steps, "solver": q.solver})
+                     [pkeys, q.sim_steps, q.solver, q.precision]),
+            cfgs=cfgs, spec={"sim_steps": q.sim_steps, "solver": q.solver,
+                             "precision": q.precision})
         nodes.append(tnode)
 
     def compose(s, out):

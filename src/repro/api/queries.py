@@ -50,7 +50,14 @@ class SweepQuery(Query):
                   one compiled program per cell topology) and returns a
                   CalibratedTable: the analytic DesignTable plus the
                   per-point simulated sense time and analytic-vs-transient
-                  error. sim_steps/solver parameterize that engine.
+                  error. sim_steps/solver/precision parameterize that
+                  engine: solver "pallas" (default) is the fused
+                  sparse-Newton engine (prefactored-K Woodbury; Pallas
+                  kernel on TPU, bit-identical XLA fallback on CPU),
+                  "sparse" the fixed-pattern symbolic-LU engine, "jnp"
+                  the dense f64 reference. precision "f64" (default) |
+                  "mixed" (f32 carried traces, f64 model + solve — passes
+                  the 1% scalar-parity contract) | "f32" (screening only).
     """
     cells: Tuple[str, ...] = ("gc2t_nn", "gc2t_np", "gc2t_osos")
     word_sizes: Tuple[int, ...] = (16, 32, 64, 128)
@@ -60,7 +67,8 @@ class SweepQuery(Query):
     batched: bool = True
     fidelity: str = "analytic"
     sim_steps: int = 300
-    solver: str = "jnp"
+    solver: str = "pallas"
+    precision: str = "f64"
 
     def __post_init__(self):
         for f in ("cells", "word_sizes", "num_words", "write_vts",
@@ -69,17 +77,21 @@ class SweepQuery(Query):
         if self.fidelity not in ("analytic", "transient"):
             raise ValueError(f"unknown SweepQuery fidelity "
                              f"{self.fidelity!r} (analytic | transient)")
-        if self.solver not in ("jnp", "pallas"):
+        if self.solver not in ("jnp", "pallas", "sparse"):
             raise ValueError(f"unknown SweepQuery solver {self.solver!r} "
-                             "(jnp | pallas)")
-        if self.fidelity == "transient" and self.solver == "pallas":
-            # the kernel computes in f32; fine for TPU screening sweeps,
-            # but it is NOT the float64 accuracy anchor
+                             "(jnp | pallas | sparse)")
+        if self.precision not in ("f64", "mixed", "f32"):
+            raise ValueError(f"unknown SweepQuery precision "
+                             f"{self.precision!r} (f64 | mixed | f32)")
+        if self.fidelity == "transient" and self.precision == "f32":
+            # pure-f32 solves through the cond(J)~1e6 MNA Jacobian are
+            # outside the parity contract (docs/fidelity-tiers.md);
+            # "mixed" keeps the model + solve in f64 and passes it
             warnings.warn(
-                "SweepQuery(fidelity='transient', solver='pallas') solves "
-                "in float32 inside the Pallas kernel; calibration numbers "
-                "are screening-grade only (use solver='jnp' for the f64 "
-                "anchor)", stacklevel=2)
+                "SweepQuery(precision='f32') solves in float32 "
+                "throughout; calibration numbers are screening-grade "
+                "only (precision='mixed' keeps the solve f64 and holds "
+                "the 1% parity contract)", stacklevel=2)
 
     def configs(self, tech):
         return lattice_configs(self.cells, self.word_sizes, self.num_words,
@@ -89,9 +101,16 @@ class SweepQuery(Query):
 @dataclass(frozen=True)
 class MatchQuery(Query):
     """Lattice x workload demands -> shmoo grid + feasibility + multibank
-    sizing (`banks_needed`) per demand (the Fig 10 flow)."""
+    sizing (`banks_needed`) per demand (the Fig 10 flow).
+
+    The default sweep runs at TRANSIENT fidelity: the fused sparse-Newton
+    engine made the HSPICE-class tier cheap enough to be the shmoo
+    default (>=5x over the dense batched baseline at <=1% parity — see
+    benchmarks/bench_transient.py), so feasibility verdicts come
+    calibrated out of the box. Pass an analytic SweepQuery to screen."""
     demands: Tuple[Demand, ...] = ()
-    sweep: SweepQuery = field(default_factory=SweepQuery)
+    sweep: SweepQuery = field(
+        default_factory=lambda: SweepQuery(fidelity="transient"))
     allow_refresh: bool = True
     max_banks: int = 1024
 

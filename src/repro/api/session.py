@@ -8,7 +8,7 @@ A Session binds a TechFile and memoizes work across queries:
   * whole DesignTables keyed by the sweep's LATTICE-SHAPING fields
     (cells/word_sizes/num_words/write_vts/wwlls + fidelity tier), so
     sweeps differing only in evaluation knobs (`batched`, an analytic
-    sweep's `sim_steps`/`solver`) share one cached table;
+    sweep's `sim_steps`/`solver`/`precision`) share one cached table;
   * compiled Reports keyed by (config, simulate, solver), match results
     and co-design reports by their own shaping fields.
 
@@ -80,7 +80,7 @@ class Session:
         self._tables: Dict[tuple, DesignTable] = {}
         self._reports: Dict[tuple, CompileResult] = {}
         # per-config transient characterizations, keyed by
-        # (config key, sim_steps, solver) — shared between overlapping
+        # (config key, sim_steps, solver, precision) — shared between overlapping
         # transient-fidelity sweeps exactly like the analytic points
         self._tchars: Dict[tuple, object] = {}
         # (lattice fields, vdd_scales) -> VddLattice; match results and
@@ -168,7 +168,8 @@ class Session:
     def _table_key(cls, sweep: SweepQuery) -> tuple:
         base = cls._lattice_key(sweep)
         if sweep.fidelity == "transient":
-            return base + ("transient", sweep.sim_steps, sweep.solver)
+            return base + ("transient", sweep.sim_steps, sweep.solver,
+                           sweep.precision)
         return base + ("analytic",)
 
     @classmethod

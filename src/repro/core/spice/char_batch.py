@@ -21,15 +21,21 @@ in a handful of compiled programs:
        * per-point stop times t_end (from the analytic swing estimate)
          and the precharge/wordline wave timings enter as (B, ...) arrays;
   3. integrate the whole group in a single `Transient.run_lattice`
-     program — `jax.vmap` over (t_end, waves, G, C) around the shared
-     analytic-Jacobian Newton stepper, whose linear solves route through
-     `jnp.linalg.solve` or the Pallas `batched_solve` kernel
-     (solver="pallas"; the vmap batch folds into the kernel grid);
+     program. solver="pallas" (default) routes to the fused sparse-
+     Newton engine (kernels.batched_solve.newton): the constant part of
+     the Jacobian G + C/h + gmin is inverted ONCE per run (h is fixed
+     per point) and each Newton iteration applies a rank-3*n_dev
+     Woodbury correction from the analytic device stamps — a Pallas
+     kernel on TPU, a bit-identical XLA while_loop on CPU. "sparse"
+     replays a symbolic LU over the fixed nonzero pattern instead;
+     "jnp" keeps the dense `jax.vmap` + `jnp.linalg.solve` reference
+     path of PR 2;
   4. extract the sense-swing threshold crossing vectorized on-device
      (`transient.crossing_time`), interpolated between bracketing steps
      exactly like the scalar reference.
 
-Compiled programs are memoized per (topology, n_seg, n_steps, solver), so
+Compiled programs are memoized per (topology, n_seg, n_steps, solver,
+precision), so
 repeated characterizations of overlapping lattices (Session sweeps,
 benchmarks) pay tracing once.
 
@@ -95,11 +101,11 @@ def _pipeline(bank0, key: tuple):
     hit = _PIPE_CACHE.get(key)
     if hit is not None:
         return hit[:-1]
-    n_seg, n_steps, solver = key[-3:]
+    n_seg, n_steps, solver, precision = key[-4:]
     ckt, meta = timing_mod.read_netlist(bank0, n_seg=n_seg)
     res_stamps, cap_stamps, src_G = ckt.build_stamps()
     system = ckt.build()
-    tr = Transient(system, solver=solver)
+    tr = Transient(system, solver=solver, precision=precision)
     out = (system, tr, res_stamps, cap_stamps, src_G, meta)
     while len(_PIPE_CACHE) >= _PIPE_CACHE_MAX:   # bound pinned programs
         del _PIPE_CACHE[next(iter(_PIPE_CACHE))]
@@ -108,11 +114,12 @@ def _pipeline(bank0, key: tuple):
 
 
 def _characterize_group(cfgs: List[BankConfig], banks, *, n_seg: int,
-                        n_steps: int, solver: str) -> List[TransientChar]:
+                        n_steps: int, solver: str,
+                        precision: str = "f64") -> List[TransientChar]:
     bank0 = banks[0]
     tech = cfgs[0].tech
     cell = bank0.cell
-    key = topology_key(cfgs[0]) + (n_seg, n_steps, solver)
+    key = topology_key(cfgs[0]) + (n_seg, n_steps, solver, precision)
     system, tr, res_stamps, cap_stamps, src_G, meta = _pipeline(bank0, key)
 
     # -- lift structural values into per-point parameter arrays. The
@@ -191,7 +198,8 @@ def _characterize_group(cfgs: List[BankConfig], banks, *, n_seg: int,
 
 
 def characterize(cfgs: Sequence[BankConfig], *, n_steps: int = 300,
-                 solver: str = "jnp", n_seg: int = 8
+                 solver: str = "pallas", n_seg: int = 8,
+                 precision: str = "f64"
                  ) -> List[Optional[TransientChar]]:
     """Batched transient read characterization of a config lattice.
 
@@ -204,9 +212,10 @@ def characterize(cfgs: Sequence[BankConfig], *, n_steps: int = 300,
     cfgs = list(cfgs)
     out: List[Optional[TransientChar]] = [None] * len(cfgs)
     # float64 throughout (see timing.simulate_read: cond(J) ~ 1e6 makes
-    # f32 Newton noise dominate the traces). Note solver="pallas" computes
-    # in f32 inside the kernel — fine for DSE screening, but the "jnp"
-    # solver is the accuracy anchor.
+    # f32 Newton noise dominate the traces). solver="pallas" (default) is
+    # the fused sparse-Newton engine — f64 or mixed-precision per the
+    # `precision` knob; "jnp" stays the dense accuracy anchor and
+    # precision="f32" is screening-only.
     with enable_x64():
         for idx in group_by_topology(cfgs).values():
             group = [cfgs[i] for i in idx]
@@ -214,7 +223,8 @@ def characterize(cfgs: Sequence[BankConfig], *, n_steps: int = 300,
             if not banks[0].is_gc:
                 continue
             chars = _characterize_group(group, banks, n_seg=n_seg,
-                                        n_steps=n_steps, solver=solver)
+                                        n_steps=n_steps, solver=solver,
+                                        precision=precision)
             for i, ch in zip(idx, chars):
                 out[i] = ch
     return out

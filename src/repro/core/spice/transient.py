@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.spice.mna import MNASystem
 
@@ -97,11 +98,14 @@ def make_stepper(system: MNASystem, solver_name: str = "jnp",
             return sys.residual(vv, v, h, wv)
 
         if newton == "modified":
-            J = sys.jacobian(v, h)
-            Jinv = jnp.linalg.inv(J)
+            # one LU factorization, k triangular-solve applies — same
+            # chord iteration as the old explicit-inverse path but
+            # O(n^3/3) + k O(n^2) instead of O(n^3) for the inverse,
+            # and partial pivoting instead of inv's full Gauss-Jordan
+            lu_piv = jax.scipy.linalg.lu_factor(sys.jacobian(v, h))
 
             def it(vv, _):
-                return vv - Jinv @ res(vv), None
+                return vv - jax.scipy.linalg.lu_solve(lu_piv, res(vv)), None
 
             v2, _ = jax.lax.scan(it, v, None, length=iters)
             return v2
@@ -136,17 +140,36 @@ def make_stepper(system: MNASystem, solver_name: str = "jnp",
 
 
 class Transient:
-    """run(waves, t_end, n_steps) -> probe traces. jit cached per n_steps."""
+    """run(waves, t_end, n_steps) -> probe traces. jit cached per n_steps.
+
+    solver: "jnp" (dense reference, vmap per-point Newton);
+    "pallas" — the fused sparse-Newton engine for `run_lattice`
+    (prefactored-K Woodbury iteration: Pallas kernel on TPU, bit-
+    identical XLA fallback on CPU; see kernels.batched_solve.newton);
+    "sparse" — the fixed-pattern symbolic-LU engine (re-factors the
+    pattern each iteration; the general path when the fused engine's
+    constant-J0 assumption is off the table). Scalar run()/run_batch()
+    always use the dense per-point stepper ("pallas" there keeps its PR 2
+    meaning: the dense Gauss-Jordan kernel inside the Newton loop).
+
+    precision (lattice engines only): "f64" | "mixed" (f32 carried
+    state/traces, f64 model + solve) | "f32" (screening only) — the
+    mixed-precision contract is documented in docs/fidelity-tiers.md.
+    """
 
     def __init__(self, system: MNASystem, solver: str = "jnp",
                  newton: str = "full", iters: int = NEWTON_ITERS,
-                 tol: float = NEWTON_TOL):
+                 tol: float = NEWTON_TOL, precision: str = "f64"):
         self.system = system
         self.solver = solver
+        self.precision = precision
+        self.iters = iters
+        self.tol = tol
         self._step = make_stepper(system, solver, newton=newton,
                                   iters=iters, tol=tol)
         self._jit_cache = {}
         self._wave_cache = {}
+        self._fused_cache = {}
 
     def _fn(self, n_steps: int, keys: tuple):
         if (n_steps, keys) not in self._jit_cache:
@@ -232,16 +255,141 @@ class Transient:
         include "G"/"C" (B, n, n) linear-matrix overrides carrying the
         per-point wire parasitics. v0: (n,) shared initial state.
         Returns {"all": (B, T, n), "t": (B, T), probes: (B, T)}.
+
+        With solver="pallas"/"sparse" the lattice routes to the fused
+        explicit-batch engines (requires "G"/"C" overrides and no
+        device-parameter batches — the char_batch contract).
         """
         if v0 is None:
             v0 = jnp.zeros((self.system.n,))
         over_batches = over_batches or {}
+        if self.solver in ("pallas", "sparse"):
+            if set(over_batches) - {"G", "C"}:
+                raise ValueError(
+                    f"solver={self.solver!r} lattice runs support only "
+                    "G/C overrides, got "
+                    f"{sorted(set(over_batches) - {'G', 'C'})}")
+            G_b = jnp.asarray(over_batches.get(
+                "G", jnp.broadcast_to(self.system.G,
+                                      (len(t_end),) + self.system.G.shape)))
+            C_b = jnp.asarray(over_batches.get(
+                "C", jnp.broadcast_to(self.system.C,
+                                      (len(t_end),) + self.system.C.shape)))
+            return self._run_lattice_fused(wt, wv, t_end, n_steps,
+                                           G_b, C_b, v0)
         keys = tuple(sorted(over_batches))
         vals = tuple(jnp.asarray(over_batches[k]) for k in keys)
         t_end = jnp.asarray(t_end, jnp.result_type(float))
         fn = self._fn(int(n_steps), keys)
         bfn = jax.vmap(lambda te, wtt, wvv, dv: fn(te, wtt, wvv, v0, dv))
         vs = bfn(t_end, jnp.asarray(wt), jnp.asarray(wv), vals)
+        out = {"all": vs,
+               "t": (jnp.arange(n_steps) + 1)[None, :]
+               * (t_end[:, None] / n_steps)}
+        for label, node in self.system.probes.items():
+            out[label] = vs[:, :, node - 1]
+        return out
+
+    def _fused_fn(self, n_steps: int):
+        """Compiled whole-lattice program for the explicit-batch engines:
+        precompute everything iteration-constant (and step-constant —
+        h is fixed per point, so the linear Jacobian part never changes
+        across the scan), then scan the per-step fused Newton solve."""
+        key = (self.solver, self.precision, int(n_steps))
+        hit = self._fused_cache.get(key)
+        if hit is not None:
+            return hit
+        from repro.core.spice.mna import G_BIG, MNASparsity
+        from repro.kernels.batched_solve import newton as nwt
+        from repro.kernels.batched_solve import ops as solve_ops
+        from repro.kernels.batched_solve import sparse as sps
+
+        system = self.system
+        n = system.n
+        iters, tol = self.iters, self.tol
+        src_node = np.asarray(system.src_node)
+        src_wave = np.asarray(system.src_wave)
+        if self.solver == "sparse":
+            spec = sps.build_spec(system, MNASparsity.from_system(system),
+                                  self.precision)
+        else:
+            spec = nwt.build_fused_spec(system, self.precision)
+        sdt, cdt = spec.dtypes
+
+        def src_sequence(te, wt, wv):
+            """Norton source injections for every step up front: the
+            waveforms are known for the whole run, so the (B, T, n)
+            sequence assembles in one pass outside the scan."""
+            B = te.shape[0]
+            h = te / n_steps
+            ts = (jnp.arange(n_steps, dtype=te.dtype) + 1.0)[None, :] \
+                * h[:, None]
+            wvals = jax.vmap(
+                lambda tt, a, b: jax.vmap(
+                    lambda x, y: jnp.interp(tt, x, y))(a, b)
+            )(ts, wt, wv)                                 # (B, n_waves, T)
+            return jnp.zeros((B, n_steps, n), cdt).at[
+                :, :, src_node].add(
+                (G_BIG * wvals[:, src_wave, :]).transpose(0, 2, 1)
+                .astype(cdt))
+
+        if self.solver == "sparse":
+            sp = spec.sp
+
+            def run(te, wt, wv, v0, G_b, C_b):
+                B = te.shape[0]
+                h = te / n_steps
+                gn = sp.project_dense(jnp.asarray(G_b, cdt))
+                cn = sp.project_dense(jnp.asarray(C_b, cdt))
+                j_const = sps.j_constant(spec, gn, cn, h)
+                coh = (cn / h[:, None]).astype(cdt)
+                src_seq = src_sequence(te, wt, wv)
+                params = sps.pack_params(system.dev, B, cdt)
+
+                def body(v, src_t):
+                    rhs = sps.coo_matvec(sp, coh, v.astype(cdt)) + src_t
+                    v2, _ = sps.newton_solve(spec, j_const, rhs, params,
+                                             v, iters, tol)
+                    return v2, v2
+
+                v00 = jnp.broadcast_to(v0.astype(sdt), (B, n))
+                _, vs = jax.lax.scan(body, v00,
+                                     jnp.swapaxes(src_seq, 0, 1))
+                return jnp.swapaxes(vs, 0, 1)
+        else:
+
+            def run(te, wt, wv, v0, G_b, C_b):
+                B = te.shape[0]
+                h = te / n_steps
+                pre = nwt.precompute(spec, G_b, C_b, h)
+                src_seq = src_sequence(te, wt, wv)
+                # K @ rhs hoist: rhs = (C/h) v_prev + src, so
+                # K rhs = KCoh @ v_prev + (K @ src) — the source term
+                # for ALL steps in one einsum outside the scan
+                Ksrc = jnp.einsum("bij,btj->bti", pre["K"], src_seq)
+                params = sps.pack_params(system.dev, B, sdt)
+
+                def body(v, Ksrc_t):
+                    Krhs = jnp.einsum("bij,bj->bi", pre["KCoh"],
+                                      v.astype(cdt)) + Ksrc_t
+                    v2 = solve_ops.fused_newton_step(
+                        spec, pre, Krhs, params, v, iters=iters, tol=tol)
+                    return v2, v2
+
+                v00 = jnp.broadcast_to(v0.astype(sdt), (B, n))
+                _, vs = jax.lax.scan(body, v00,
+                                     jnp.swapaxes(Ksrc, 0, 1))
+                return jnp.swapaxes(vs, 0, 1)
+
+        fn = jax.jit(run)
+        self._fused_cache[key] = fn
+        return fn
+
+    def _run_lattice_fused(self, wt, wv, t_end, n_steps, G_b, C_b, v0):
+        t_end = jnp.asarray(t_end, jnp.result_type(float))
+        fn = self._fused_fn(int(n_steps))
+        vs = fn(t_end, jnp.asarray(wt), jnp.asarray(wv),
+                jnp.asarray(v0), G_b, C_b)
         out = {"all": vs,
                "t": (jnp.arange(n_steps) + 1)[None, :]
                * (t_end[:, None] / n_steps)}

@@ -54,7 +54,10 @@ def _gauss_jordan_kernel(j_ref, r_ref, x_ref):
     x_ref[...] = (r / diag).astype(x_ref.dtype)
 
 
-def _pad_to(x, n, axis, diag_pad=False):
+def _pad_to(x, n, axis):
+    """Zero-pad `x` to length `n` along `axis` (no-op when already
+    there). Callers that need non-singular pad blocks add identity rows
+    themselves — see `batched_solve`."""
     pad = n - x.shape[axis]
     if pad <= 0:
         return x

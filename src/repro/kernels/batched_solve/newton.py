@@ -1,0 +1,325 @@
+"""Fused low-rank Newton engine: the per-iteration body behind
+`solver="pallas"`.
+
+The sparse-LU engine (`sparse.py`) already beats B serial dense solves
+by replaying a symbolic factorization over the batch axis — but it still
+refactors the full pattern every Newton iteration. This module goes one
+step further using two structural facts of the batched transient runs:
+
+  1. the timestep h = t_end / n_steps is CONSTANT per lattice point, so
+     the linear part of the Jacobian J0 = G + C/h + gmin is constant
+     across the whole run and can be factored ONCE per characterization
+     (we keep K = J0^-1 explicitly — one (B, n, n) inverse per run, never
+     per step);
+  2. the only entries that change between iterations are the per-device
+     3x3 conductance stamps, i.e. J = J0 + Um @ D @ Vm with Um/Vm
+     CONSTANT 0/1 incidence matrices of the device terminals and D the
+     block-diagonal (3 n_dev x 3 n_dev) matrix of channel partials — a
+     rank 3*n_dev update.
+
+The Newton step then collapses via the Woodbury identity
+
+    dv = J^-1 F = t - KU @ (I + D S)^-1 D (Vm @ t),
+    t  = K F = v - K rhs + (K Pa) i_ab + (K Pg) i_g
+
+where S = Vm K Um, KU = K Um, K Pa / K Pg (terminal incidence columns of
+K) are all hoisted out of the iteration, and K rhs is hoisted out to
+once per TIMESTEP (K C/h and the K @ source-injection sequence are
+per-run precomputes). Note K J0 = I kills the residual matvec entirely:
+the iteration touches no (B, n, n) operand at all — just the channel
+model on (B, n_dev) and a (3 n_dev)^2 solve. This is an inexact-Newton
+scheme in the round-off sense only: the fixed point satisfies F(v) = 0
+exactly regardless of the error in K, so parity with the dense reference
+holds to integration tolerance (asserted at 1e-6 on whole traces).
+
+D itself is rank-2 per device: D_d = s_a (x) d3 + s_g (x) gg*e_g with
+s_a = (1,-1,0), s_g = (-1/2,-1/2,1) over KCL rows (a,b,g), d3 the
+channel partials and e_g = (1,-1/2,-1/2) the gate-leak row — so (I+DS)
+assembles from two outer products per device, no 3x3 stamps are ever
+materialized.
+
+The same traced body runs three ways: under `jax.lax.while_loop` with a
+whole-batch early exit (the XLA fallback, production path on CPU), under
+a fixed-length `fori_loop` inside the Pallas kernel (`fused.py`), and in
+interpret mode for the CPU parity tests. Per-lane freeze (`done` mask)
+makes all three bit-identical: a converged lane stops changing, so an
+early-exited while_loop and a run-to-the-cap fori_loop agree exactly.
+
+Precision policy (docs/fidelity-tiers.md): `store_dtype` is the dtype of
+the carried state/traces, `compute_dtype` the dtype of the model
+evaluation and the Woodbury solve. "mixed" = f32 storage, f64 compute —
+safe because Newton re-evaluates the residual from the stored state each
+iteration; "f32" is screening-only (cond(J0) ~ 1e6 amplifies solve
+round-off into the traces).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spice.mna import G_MIN, channel_current_and_grads
+from repro.kernels.batched_solve.sparse import (PARAM_FIELDS, PRECISIONS,
+                                                pack_params)
+
+__all__ = ["FusedSpec", "build_fused_spec", "precompute", "make_fused_iter",
+           "newton_solve", "newton_solve_fixed", "pack_params"]
+
+#: KCL row signs of the channel current (rows a, b, g)
+S_A = np.array([1.0, -1.0, 0.0])
+#: KCL row signs of the gate-leak current
+S_G = np.array([-0.5, -0.5, 1.0])
+#: gate-leak voltage row: i_g = gg * (vg - (va+vb)/2), columns (g, a, b)
+E_G = np.array([1.0, -0.5, -0.5])
+
+
+@dataclass(frozen=True, eq=False)
+class FusedSpec:
+    """Static structure of one topology group for the fused engine:
+    terminal incidence matrices and gather maps (host numpy — they bake
+    into the jitted programs / Pallas kernel as constants). eq=False:
+    identity hashing, so the spec can be a jit static argument (specs
+    are built once per topology group and cached)."""
+    n: int
+    n_dev: int
+    um: np.ndarray          # (n, k) KCL row incidence, cols per device (a,b,g)
+    vm: np.ndarray          # (k, n) terminal voltage rows, per device (g,a,b)
+    pa: np.ndarray          # (n, n_dev) channel-current KCL incidence
+    pg: np.ndarray          # (n, n_dev) gate-leak KCL incidence
+    g_safe: np.ndarray      # terminal gather indices, ground -> n (pad row)
+    a_safe: np.ndarray
+    b_safe: np.ndarray
+    precision: str = "f64"
+
+    @property
+    def k(self) -> int:
+        return 3 * self.n_dev
+
+    @property
+    def dtypes(self) -> tuple:
+        return PRECISIONS[self.precision]
+
+
+def build_fused_spec(system, precision: str = "f64") -> FusedSpec:
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r} "
+                         f"({' | '.join(PRECISIONS)})")
+    n = system.n
+    didx_g = np.asarray(system.didx["g"])
+    didx_a = np.asarray(system.didx["a"])
+    didx_b = np.asarray(system.didx["b"])
+    n_dev = len(didx_g)
+    k = 3 * n_dev
+    um = np.zeros((n, k))
+    vm = np.zeros((k, n))
+    pa = np.zeros((n, n_dev))
+    pg = np.zeros((n, n_dev))
+    for d in range(n_dev):
+        a, b, g = int(didx_a[d]), int(didx_b[d]), int(didx_g[d])
+        if a >= 0:
+            pa[a, d] += 1.0
+            pg[a, d] -= 0.5
+        if b >= 0:
+            pa[b, d] -= 1.0
+            pg[b, d] -= 0.5
+        if g >= 0:
+            pg[g, d] += 1.0
+        for j, node in enumerate((a, b, g)):    # Um columns: rows of D
+            if node >= 0:
+                um[node, 3 * d + j] = 1.0
+        for j, node in enumerate((g, a, b)):    # Vm rows: cols of D
+            if node >= 0:
+                vm[3 * d + j, node] = 1.0
+    return FusedSpec(
+        n=n, n_dev=n_dev, um=um, vm=vm, pa=pa, pg=pg,
+        g_safe=np.where(didx_g >= 0, didx_g, n),
+        a_safe=np.where(didx_a >= 0, didx_a, n),
+        b_safe=np.where(didx_b >= 0, didx_b, n),
+        precision=precision)
+
+
+def precompute(spec: FusedSpec, G_b, C_b, h):
+    """Per-run constants of the Woodbury iteration. G_b/C_b (B, n, n)
+    dense linear stamps (built once per lattice), h (B,) per-point step.
+
+    Returns a dict pytree: K (B,n,n) inverse of the constant Jacobian
+    part, KU (B,n,k), Sb (B,n_dev,3,k) = Vm K Um in device blocks,
+    KPa/KPg (B,n,n_dev) = K @ terminal incidence, KCoh (B,n,n) = K C / h
+    (for the per-step rhs hoist K rhs = KCoh @ v_prev + K src)."""
+    _, cdt = spec.dtypes
+    n = spec.n
+    G_b = jnp.asarray(G_b, cdt)
+    C_b = jnp.asarray(C_b, cdt)
+    h = jnp.asarray(h, cdt)
+    J0 = G_b + C_b / h[:, None, None] + G_MIN * jnp.eye(n, dtype=cdt)
+    K = jnp.linalg.inv(J0)
+    KU = jnp.einsum("bij,jk->bik", K, jnp.asarray(spec.um, cdt))
+    Sb = jnp.einsum("ki,bij->bkj", jnp.asarray(spec.vm, cdt), KU)
+    if spec.n_dev:
+        Sb = Sb.reshape(-1, spec.n_dev, 3, spec.k)
+    return {
+        "K": K,
+        "KU": KU,
+        "Sb": Sb,
+        "KPa": jnp.einsum("bij,jd->bid", K, jnp.asarray(spec.pa, cdt)),
+        "KPg": jnp.einsum("bij,jd->bid", K, jnp.asarray(spec.pg, cdt)),
+        "KCoh": jnp.einsum("bij,bjk->bik", K, C_b) / h[:, None, None],
+    }
+
+
+def _inv3(M):
+    """Closed-form batched 3x3 inverse (adjugate via cross products) —
+    branch-free, no per-pivot unrolling."""
+    r0 = jnp.cross(M[..., 1, :], M[..., 2, :])
+    r1 = jnp.cross(M[..., 2, :], M[..., 0, :])
+    r2 = jnp.cross(M[..., 0, :], M[..., 1, :])
+    det = jnp.sum(M[..., 0, :] * r0, axis=-1)
+    return jnp.stack([r0, r1, r2], axis=-1) / det[..., None, None]
+
+
+def _solve_small(A, b, n_dev: int):
+    """w = A^-1 b for the (B, k, k) Woodbury capacitance matrix
+    A = I + D S. k = 3 n_dev is tiny; specialize the common shapes
+    (closed-form 3x3 blocks) and fall back to unrolled unpivoted
+    elimination for larger device counts (A is a small perturbation of
+    the identity in the circuits this engine targets)."""
+    if n_dev == 1:
+        return jnp.einsum("bij,bj->bi", _inv3(A), b)
+    if n_dev == 2:
+        P, Q = A[:, :3, :3], A[:, :3, 3:]
+        R, T = A[:, 3:, :3], A[:, 3:, 3:]
+        Pi = _inv3(P)
+        X = jnp.einsum("bij,bjk->bik", Pi, Q)
+        y1 = jnp.einsum("bij,bj->bi", Pi, b[:, :3])
+        x2 = jnp.einsum(
+            "bij,bj->bi",
+            _inv3(T - jnp.einsum("bij,bjk->bik", R, X)),
+            b[:, 3:] - jnp.einsum("bij,bj->bi", R, y1))
+        x1 = y1 - jnp.einsum("bij,bj->bi", X, x2)
+        return jnp.concatenate([x1, x2], axis=1)
+    k = 3 * n_dev
+    for i in range(k):
+        f = A[:, i + 1:, i] / A[:, i, i:i + 1]
+        A = A.at[:, i + 1:, i:].add(-f[:, :, None] * A[:, i:i + 1, i:])
+        b = b.at[:, i + 1:].add(-f * b[:, i:i + 1])
+    x = jnp.zeros_like(b)
+    for i in range(k - 1, -1, -1):
+        s = b[:, i] - jnp.sum(A[:, i, i + 1:] * x[:, i + 1:], axis=1)
+        x = x.at[:, i].set(s / A[:, i, i])
+    return x
+
+
+def make_fused_iter(spec: FusedSpec, tol: float):
+    """Returns iter_fn(pre, Krhs, params, v, done) -> (v, done): one
+    fused Woodbury-Newton step. `pre` from `precompute`, Krhs (B, n) the
+    per-timestep hoist K @ rhs, params (B, N_PARAMS, n_dev) from
+    `pack_params`, v (B, n) store-dtype state, done (B,) freeze mask.
+
+    The body is deliberately CONSTANT-FREE: Pallas rejects kernels that
+    capture array literals, so the terminal gathers unroll over the
+    (static, tiny) device list instead of index arrays, the S_A/S_G/E_G
+    sign vectors enter as python scalar coefficients in explicit row
+    stacks, and the Woodbury identity comes from broadcasted_iota. The
+    values are bit-compatible with the einsum formulation (the sign
+    entries are exact binary fractions)."""
+    sdt, cdt = spec.dtypes
+    n_dev, k = spec.n_dev, spec.k
+    # host-side static node indices per device terminal (-1 = ground)
+    g_idx = [int(i) if i < spec.n else -1 for i in spec.g_safe]
+    a_idx = [int(i) if i < spec.n else -1 for i in spec.a_safe]
+    b_idx = [int(i) if i < spec.n else -1 for i in spec.b_safe]
+
+    def gather(x, idx):
+        """(B, n) -> (B, n_dev) terminal values; ground reads 0."""
+        cols = [x[:, i] if i >= 0 else jnp.zeros_like(x[:, 0])
+                for i in idx]
+        return jnp.stack(cols, axis=1)
+
+    def iter_fn(pre, Krhs, params, v, done):
+        B = v.shape[0]
+        vc = v.astype(cdt)
+        if n_dev == 0:      # linear circuit: one exact solve
+            dv = vc - Krhs.astype(cdt)
+            v_next = jnp.where(done[:, None], v, (vc - dv).astype(sdt))
+            return v_next, done | jnp.ones((B,), bool)
+        vg = gather(vc, g_idx)
+        va = gather(vc, a_idx)
+        vb = gather(vc, b_idx)
+        p = params.astype(cdt)
+        i_ab, di_dvg, di_dva, di_dvb = channel_current_and_grads(
+            *(p[:, i] for i in range(len(PARAM_FIELDS))), vg, va, vb)
+        gg = p[:, len(PARAM_FIELDS)]
+        i_g = gg * (vg - 0.5 * (va + vb))
+        d3 = jnp.stack([di_dvg, di_dva, di_dvb], axis=2)  # (B, n_dev, 3)
+        Sb = pre["Sb"].astype(cdt)
+        t = (vc - Krhs.astype(cdt)
+             + jnp.einsum("bid,bd->bi", pre["KPa"].astype(cdt), i_ab)
+             + jnp.einsum("bid,bd->bi", pre["KPg"].astype(cdt), i_g))
+        # Vm @ t rows are one-hot terminal picks (g, a, b) per device
+        g3 = jnp.stack([gather(t, g_idx), gather(t, a_idx),
+                        gather(t, b_idx)], axis=2)        # (B, n_dev, 3)
+        # D = s_a (x) d3 + s_g (x) gg*e_g per device block (rank 2);
+        # e_g = (1, -1/2, -1/2) over Sb's terminal axis (g, a, b)
+        d3S = jnp.einsum("bdj,bdjk->bdk", d3, Sb)         # (B, n_dev, k)
+        egS = (Sb[:, :, 0] - 0.5 * Sb[:, :, 1] - 0.5 * Sb[:, :, 2]) \
+            * gg[:, :, None]
+        # rows (a, b, g): s_a = (1, -1, 0), s_g = (-1/2, -1/2, 1)
+        DS = jnp.stack([d3S - 0.5 * egS,
+                        -d3S - 0.5 * egS,
+                        egS], axis=2).reshape(B, k, k)
+        rows = jax.lax.broadcasted_iota(jnp.int32, (k, k), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (k, k), 1)
+        A = (rows == cols).astype(cdt)[None] + DS
+        d3g = jnp.einsum("bdj,bdj->bd", d3, g3)
+        egg = (g3[:, :, 0] - 0.5 * g3[:, :, 1] - 0.5 * g3[:, :, 2]) * gg
+        b_k = jnp.stack([d3g - 0.5 * egg,
+                         -d3g - 0.5 * egg,
+                         egg], axis=2).reshape(B, k)
+        w = _solve_small(A, b_k, n_dev)
+        dv = t - jnp.einsum("bnk,bk->bn", pre["KU"].astype(cdt), w)
+        conv = jnp.max(jnp.abs(dv), axis=1) < tol
+        v_next = jnp.where(done[:, None], v, (vc - dv).astype(sdt))
+        return v_next, done | conv
+
+    return iter_fn
+
+
+def newton_solve(spec: FusedSpec, pre, Krhs, params, v0,
+                 iters: int, tol: float):
+    """XLA fallback: fused iteration under a while_loop with whole-batch
+    early exit. Per-lane freeze makes the result bit-identical to the
+    fixed-length variant the Pallas kernel runs."""
+    it = make_fused_iter(spec, tol)
+
+    def cond(state):
+        _, done, i = state
+        return (i < iters) & jnp.logical_not(jnp.all(done))
+
+    def body(state):
+        v, done, i = state
+        v, done = it(pre, Krhs, params, v, done)
+        return v, done, i + 1
+
+    B = v0.shape[0]
+    v, _, n_it = jax.lax.while_loop(
+        cond, body, (v0, jnp.zeros((B,), bool), jnp.asarray(0)))
+    return v, n_it
+
+
+def newton_solve_fixed(spec: FusedSpec, pre, Krhs, params, v0,
+                       iters: int, tol: float):
+    """Fixed-iteration variant (fori_loop, no early exit) — the exact
+    control flow the Pallas kernel uses; parity tests run this against
+    the kernel in interpret mode."""
+    it = make_fused_iter(spec, tol)
+    B = v0.shape[0]
+
+    def body(_, state):
+        v, done = state
+        return it(pre, Krhs, params, v, done)
+
+    v, _ = jax.lax.fori_loop(0, iters, body,
+                             (v0, jnp.zeros((B,), bool)))
+    return v

@@ -1,22 +1,46 @@
-"""Jit'd public wrappers for the batched MNA solve.
+"""Jit'd public wrappers for the batched MNA solvers.
 
-On CPU (this container / unit tests) the Pallas kernel runs in
-interpret mode; on TPU it compiles natively. `solve1` adapts the kernel
-to the single-system signature the Newton stepper uses — under vmap
-(design-space batches) the batch dimension folds back into the kernel's
-grid via jax's batching rule for pallas_call.
+Dense Gauss-Jordan (`solve`/`batched_solve`): the PR 2 kernel, f32
+per-iteration dense solves for screening sweeps. On CPU the Pallas
+kernel runs in interpret mode; on TPU it compiles natively. `solve1`
+adapts it to the single-system signature the Newton stepper uses —
+under vmap the batch dimension folds back into the kernel's grid via
+jax's batching rule for pallas_call.
+
+Fused Newton (`fused_newton_step`): the sparse-Newton engine's
+whole-timestep solve (newton.py / fused.py). Backend dispatch: the
+native Pallas kernel on TPU, the identical-result XLA while_loop on
+CPU (interpret-mode Pallas is an emulation — orders of magnitude slower
+than compiled XLA, so it is reserved for the parity tests).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.batched_solve import newton as _newton
+from repro.kernels.batched_solve.fused import fused_newton as _fused_kernel
 from repro.kernels.batched_solve.kernel import batched_solve as _kernel
 from repro.kernels.batched_solve.ref import batched_solve_ref
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def fused_newton_step(spec, pre, Krhs, params, v0, *, iters, tol,
+                      force_kernel: bool = False):
+    """One timestep's fused Newton solve -> v (B, n). Routes to the
+    Pallas kernel on TPU (or when forced, in interpret mode — the parity
+    tests), else to the bit-identical XLA while_loop fallback."""
+    if jax.default_backend() == "tpu":
+        return _fused_kernel(spec, pre, Krhs, params, v0,
+                             iters=iters, tol=tol, interpret=False)
+    if force_kernel:
+        return _fused_kernel(spec, pre, Krhs, params, v0,
+                             iters=iters, tol=tol, interpret=True)
+    v, _ = _newton.newton_solve(spec, pre, Krhs, params, v0, iters, tol)
+    return v
 
 
 def batched_solve(J, r, block_b: int = 8):

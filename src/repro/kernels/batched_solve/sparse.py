@@ -1,0 +1,318 @@
+"""Fixed-pattern sparse-Newton engine: symbolic LU + the fused
+re-stamp / factor / solve / update iteration body.
+
+The MNA Newton system J dv = F(v) of one topology group has a FIXED
+sparsity pattern across the whole design lattice (`MNASparsity`,
+exported by core.spice.mna): the incidence stamps pin where G/C/device
+conductances land, only the values vary per point. This module turns
+that pattern into a compiled solver:
+
+  * `lu_schedule` runs the SYMBOLIC factorization once on the host —
+    natural pivot order (the gmin + C/h + G_BIG diagonal stamps make J
+    strictly diagonally dominant, the same argument the dense
+    Gauss-Jordan kernel relies on), fill-in positions appended after
+    the pattern entries. The RBL-ladder netlists factor with zero fill.
+  * `factor` / `solve_factored` replay that schedule numerically on
+    (B, nnz) value vectors — every step is a static-index gather /
+    fused-multiply / scatter over the batch axis, so the whole lattice
+    factors as a handful of vectorized ops instead of B serial dense
+    LAPACK calls on (n, n) matrices.
+  * `make_newton_iter` builds the fused per-iteration body the Pallas
+    kernel (kernel.sparse_newton) and the XLA fallback (`newton_solve`)
+    BOTH trace: gather device terminal voltages, evaluate the channel
+    model once for current + 3x3 stamps (`channel_current_and_grads`),
+    scatter the nine entries onto the constant part of the pattern,
+    factor, triangular-solve, apply the masked update. Interpret-mode
+    parity tests hold the two in lockstep.
+
+Precision policy (the mixed-precision contract, see
+docs/fidelity-tiers.md): `compute_dtype` is the dtype of the residual
+accumulation, Jacobian stamps and the factor/solve; `store_dtype` is
+the dtype of the carried state. "mixed" = f32 storage with every
+per-iteration accumulation in f64 — safe because Newton re-evaluates
+the residual from the stored state each iteration (self-correcting),
+while a pure-f32 solve through the cond(J)~1e6 MNA Jacobian is not.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spice.mna import (G_MIN, MNASparsity,
+                                  channel_current_and_grads)
+
+#: storage/compute dtypes per precision mode
+PRECISIONS: Dict[str, tuple] = {
+    "f64": (jnp.float64, jnp.float64),
+    "mixed": (jnp.float32, jnp.float64),
+    "f32": (jnp.float32, jnp.float32),
+}
+
+#: device parameter pack order (gg = gate-leak conductance ig*w/1.1 is
+#: appended as the 8th row by `pack_params`)
+PARAM_FIELDS = ("pol", "vt0", "n", "kp", "lam", "w", "l")
+N_PARAMS = len(PARAM_FIELDS) + 1
+
+
+# ---------------------------------------------------------------------------
+# symbolic factorization
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class _Step:
+    """Elimination step of pivot k: static index maps into the filled
+    value vector."""
+    k: int
+    dpos: int                  # position of (k, k)
+    colk: np.ndarray           # positions of (i, k), i in rows (L column)
+    rowk: np.ndarray           # positions of (k, j), j in cols (U row)
+    upd: np.ndarray            # (len(rows), len(cols)) positions of (i, j)
+    rows: np.ndarray           # row indices i > k with (i, k) present
+    cols: np.ndarray           # col indices j > k with (k, j) present
+
+
+@dataclass(frozen=True)
+class LUSchedule:
+    """Host-side symbolic LU of one sparsity pattern. `nnz` counts the
+    pattern entries, `nnz_f` includes fill-in appended after them (the
+    numeric kernels zero-pad their value vectors to nnz_f)."""
+    n: int
+    nnz: int
+    nnz_f: int
+    steps: Tuple[_Step, ...]
+
+
+def lu_schedule(sp: MNASparsity) -> LUSchedule:
+    """Symbolic Gaussian elimination in natural order (unpivoted — J is
+    strictly diagonally dominant, asserted against jnp.linalg.solve in
+    tests). Deterministic: fill entries append in discovery order."""
+    n = sp.n
+    entries = [(int(i), int(j)) for i, j in zip(sp.rows, sp.cols)]
+    patf = set(entries)
+    for k in range(n):
+        rows_k = [i for i in range(k + 1, n) if (i, k) in patf]
+        cols_k = [j for j in range(k + 1, n) if (k, j) in patf]
+        for i in rows_k:
+            for j in cols_k:
+                if (i, j) not in patf:
+                    patf.add((i, j))
+                    entries.append((i, j))
+    pos = {e: p for p, e in enumerate(entries)}
+    steps = []
+    for k in range(n):
+        rows_k = [i for i in range(k + 1, n) if (i, k) in patf]
+        cols_k = [j for j in range(k + 1, n) if (k, j) in patf]
+        steps.append(_Step(
+            k=k, dpos=pos[(k, k)],
+            colk=np.array([pos[(i, k)] for i in rows_k], np.int32),
+            rowk=np.array([pos[(k, j)] for j in cols_k], np.int32),
+            upd=np.array([[pos[(i, j)] for j in cols_k] for i in rows_k],
+                         np.int32).reshape(len(rows_k), len(cols_k)),
+            rows=np.array(rows_k, np.int32),
+            cols=np.array(cols_k, np.int32)))
+    return LUSchedule(n=n, nnz=sp.nnz, nnz_f=len(entries),
+                      steps=tuple(steps))
+
+
+# ---------------------------------------------------------------------------
+# numeric kernels over (B, nnz) value vectors
+# ---------------------------------------------------------------------------
+
+def factor(sched: LUSchedule, vals):
+    """In-pattern LU of (B, nnz_f) values (unrolled static schedule).
+    L factors overwrite the (i, k) entries, U stays in place."""
+    for st in sched.steps:
+        if not len(st.rows):
+            continue
+        f = vals[:, st.colk] / vals[:, st.dpos][:, None]
+        vals = vals.at[:, st.colk].set(f)
+        if len(st.cols):
+            vals = vals.at[:, st.upd].add(
+                -f[:, :, None] * vals[:, st.rowk][:, None, :])
+    return vals
+
+
+def solve_factored(sched: LUSchedule, lu, r):
+    """Forward + back substitution: lu (B, nnz_f), r (B, n) -> x."""
+    y = r
+    for st in sched.steps:
+        if len(st.rows):
+            y = y.at[:, st.rows].add(-lu[:, st.colk] * y[:, st.k:st.k + 1])
+    x = y
+    for st in reversed(sched.steps):
+        s = x[:, st.k]
+        if len(st.cols):
+            s = s - jnp.sum(lu[:, st.rowk] * x[:, st.cols], axis=1)
+        x = x.at[:, st.k].set(s / lu[:, st.dpos])
+    return x
+
+
+def factor_solve(sched: LUSchedule, vals, r):
+    return solve_factored(sched, factor(sched, vals), r)
+
+
+def coo_matvec(sp: MNASparsity, vals, v):
+    """y = A @ v with A given as (B, nnz) pattern values, v (B, n)."""
+    prod = vals[:, :sp.nnz] * v[:, sp.cols]
+    return jnp.zeros_like(v).at[:, sp.rows].add(prod)
+
+
+# ---------------------------------------------------------------------------
+# the fused Newton iteration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class NewtonSpec:
+    """Everything static the fused iteration needs: the pattern, its
+    symbolic LU, the device terminal index maps and the precision
+    policy. Built once per (topology, precision) by `build_spec`."""
+    sp: MNASparsity
+    sched: LUSchedule
+    didx_g: np.ndarray
+    didx_a: np.ndarray
+    didx_b: np.ndarray
+    precision: str = "f64"
+
+    @property
+    def n_dev(self) -> int:
+        return len(self.didx_g)
+
+    @property
+    def dtypes(self) -> tuple:
+        return PRECISIONS[self.precision]
+
+
+def build_spec(system, sparsity: Optional[MNASparsity] = None,
+               precision: str = "f64") -> NewtonSpec:
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r} "
+                         f"({' | '.join(PRECISIONS)})")
+    sp = sparsity if sparsity is not None \
+        else MNASparsity.from_system(system)
+    return NewtonSpec(sp, lu_schedule(sp), np.asarray(system.didx["g"]),
+                      np.asarray(system.didx["a"]),
+                      np.asarray(system.didx["b"]), precision)
+
+
+def pack_params(dev: dict, B: int, dtype) -> jnp.ndarray:
+    """Device parameter dict -> (B, N_PARAMS, n_dev) operand block
+    (PARAM_FIELDS rows + the gate-leak conductance gg as the last row),
+    broadcast over the batch. One array keeps the Pallas kernel's ref
+    list flat."""
+    n_dev = int(np.shape(dev["pol"])[-1])
+    cols = [jnp.asarray(dev[k], dtype) for k in PARAM_FIELDS]
+    cols.append(jnp.asarray(dev["ig"] * dev["w"] / 1.1, dtype))
+    out = jnp.stack([jnp.broadcast_to(c, (B, n_dev)) for c in cols],
+                    axis=1)
+    return out
+
+
+def make_newton_iter(spec: NewtonSpec, tol: float):
+    """Returns iter_fn(j_const, rhs, params, v, done) -> (v, done): one
+    fused re-stamp + factor + solve + masked-update step, shared by the
+    XLA while_loop fallback and the Pallas kernel body.
+
+      j_const  (B, nnz)   G + G_BIG + gmin + C/h pattern values
+                          (constant across a timestep's iterations)
+      rhs      (B, n)     (C/h) @ v_prev + Norton source injections
+      params   (B, N_PARAMS, n_dev)  from `pack_params`
+      v        (B, n)     state (store dtype)
+      done     (B,)       per-lane convergence mask; converged lanes
+                          freeze (bit-exact across backends/iteration
+                          counts — what the interpret-vs-XLA parity
+                          tests key on)
+    """
+    sdt, cdt = spec.dtypes
+    sp, sched = spec.sp, spec.sched
+    n_dev = spec.n_dev
+    # ground (-1) terminal reads as v=0 via a padded gather; scatters
+    # mask ground rows/entries out
+    g_safe = np.where(spec.didx_g >= 0, spec.didx_g, sp.n)
+    a_safe = np.where(spec.didx_a >= 0, spec.didx_a, sp.n)
+    b_safe = np.where(spec.didx_b >= 0, spec.didx_b, sp.n)
+    dev_ok = (spec.sp.dev_pos >= 0)                     # (9, n_dev)
+    dev_safe = np.where(dev_ok, sp.dev_pos, 0).ravel()
+    row_idx = {"a": spec.didx_a, "b": spec.didx_b, "g": spec.didx_g}
+    row_ok = {k: (idx >= 0) for k, idx in row_idx.items()}
+    row_safe = {k: np.where(ok, row_idx[k], 0)
+                for k, ok in row_ok.items()}
+
+    def iter_fn(j_const, rhs, params, v, done):
+        B = v.shape[0]
+        vc = v.astype(cdt)
+        jc = j_const.astype(cdt)
+        r = coo_matvec(sp, jc, vc) - rhs.astype(cdt)
+        if n_dev:
+            vpad = jnp.concatenate(
+                [vc, jnp.zeros((B, 1), cdt)], axis=1)
+            vg, va, vb = vpad[:, g_safe], vpad[:, a_safe], vpad[:, b_safe]
+            p = params.astype(cdt)
+            i_ab, di_dvg, di_dva, di_dvb = channel_current_and_grads(
+                *(p[:, i] for i in range(len(PARAM_FIELDS))), vg, va, vb)
+            gg = p[:, len(PARAM_FIELDS)]
+            i_g = gg * (vg - 0.5 * (va + vb))
+            cur = {"a": i_ab - 0.5 * i_g, "b": -i_ab - 0.5 * i_g,
+                   "g": i_g}
+            for kk in ("a", "b", "g"):
+                r = r.at[:, row_safe[kk]].add(
+                    jnp.where(row_ok[kk][None, :], cur[kk], 0.0))
+            # the nine stamp entries, `device_jacobian` order
+            jac9 = jnp.stack([
+                di_dvg - 0.5 * gg, di_dva + 0.25 * gg, di_dvb + 0.25 * gg,
+                -di_dvg - 0.5 * gg, -di_dva + 0.25 * gg,
+                -di_dvb + 0.25 * gg,
+                gg, -0.5 * gg, -0.5 * gg], axis=1)     # (B, 9, n_dev)
+            jvals = jc.at[:, dev_safe].add(
+                jnp.where(dev_ok.ravel()[None, :],
+                          jac9.reshape(B, 9 * n_dev), 0.0))
+        else:
+            jvals = jc
+        if sched.nnz_f > sched.nnz:   # zero-pad for fill-in entries
+            jvals = jnp.concatenate(
+                [jvals, jnp.zeros((B, sched.nnz_f - sched.nnz), cdt)],
+                axis=1)
+        dv = factor_solve(sched, jvals, r)
+        conv = jnp.max(jnp.abs(dv), axis=1) < tol
+        v_next = jnp.where(done[:, None], v, (vc - dv).astype(sdt))
+        return v_next, done | conv
+
+    return iter_fn
+
+
+def newton_solve(spec: NewtonSpec, j_const, rhs, params, v0,
+                 iters: int, tol: float):
+    """XLA fallback: run the fused iteration under a while_loop with a
+    whole-batch early exit (every lane frozen individually, the loop
+    ends when all are). This is what `solver="sparse"` — and
+    `solver="pallas"` on backends without a native Pallas lowering —
+    executes."""
+    it = make_newton_iter(spec, tol)
+
+    def cond(state):
+        _, done, i = state
+        return (i < iters) & jnp.logical_not(jnp.all(done))
+
+    def body(state):
+        v, done, i = state
+        v, done = it(j_const, rhs, params, v, done)
+        return v, done, i + 1
+
+    B = v0.shape[0]
+    v, _, n_it = jax.lax.while_loop(
+        cond, body, (v0, jnp.zeros((B,), bool), jnp.asarray(0)))
+    return v, n_it
+
+
+def j_constant(spec: NewtonSpec, gn, cn, h):
+    """The iteration-constant pattern values G + gmin + C/h for a run:
+    gn/cn (B, nnz) linear-element values (sources folded into gn),
+    h (B,) per-point step size. Kept in the COMPUTE dtype: under the
+    mixed contract only the carried state/traces drop to f32 — the
+    Jacobian operands and the residual accumulation stay f64."""
+    _, cdt = spec.dtypes
+    j = gn + cn / h[:, None]
+    return j.at[:, spec.sp.diag_pos].add(G_MIN).astype(cdt)

@@ -60,7 +60,8 @@ __all__ = ["CompileService", "parse_query"]
 # ---------------------------------------------------------------------------
 
 _SWEEP_TUPLES = ("cells", "word_sizes", "num_words", "write_vts", "wwlls")
-_SWEEP_SCALARS = ("batched", "fidelity", "sim_steps", "solver")
+_SWEEP_SCALARS = ("batched", "fidelity", "sim_steps", "solver",
+                  "precision")
 
 
 def _parse_sweep(spec: dict) -> SweepQuery:
