@@ -1,0 +1,151 @@
+"""Benchmark: gradient-based design optimization vs a dense vdd grid.
+
+    PYTHONPATH=src python benchmarks/bench_optimize.py
+    PYTHONPATH=src python benchmarks/bench_optimize.py --smoke   # CI
+
+The question the differentiable path has to answer: does seeding from a
+COARSE voltage ladder and descending the implicit-function gradients
+reach the dense grid's optimum at a fraction of its lattice
+evaluations?  Both flows minimize standby power over the same config
+lattice under the same (read frequency, retention lifetime) demand:
+
+  dense — evaluate every config at `--dense-rungs` voltage rungs
+          spanning the operating window, take the feasible argmin
+          (the pre-PR OptimizeQuery strategy: sweep and pick).
+  grad  — evaluate every config at the 4-rung COARSE ladder only, pick
+          the winning config, then refine its continuous vdd knob with
+          projected Adam on `repro.core.dse_grad` + exact quantized
+          verification (`repro.optim.dse_opt`). Gradient steps are
+          counted as full evaluations (conservative: a VJP step costs
+          ~2 forward evals of the smooth surrogate, but none of the
+          exact model).
+
+Checks recorded (the PR's acceptance bar):
+  * objective_le_grid — the gradient flow's EXACT verified objective
+                        <= the dense grid's optimum (never worse)
+  * evals_lt_25pct    — total gradient-flow evaluations < 25% of the
+                        dense grid's (full mode; smoke lattices are too
+                        small for the ratio to be meaningful)
+  * met               — the returned point passes exact dse.feasible
+
+Writes results/bench_optimize.json and mirrors it to
+results/benchmarks/BENCH_optimize.json for the benchmark index.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+COARSE = (0.7, 0.85, 1.0, 1.15)
+DEMAND = {"target_freq_hz": 2e8, "target_ret_s": 5e-5}
+OBJECTIVE = "standby_w"
+
+
+def _lattice(smoke: bool):
+    from repro.core.dse import lattice_configs
+    if smoke:
+        return lattice_configs(cells=("gc2t_nn", "gc2t_np"),
+                               word_sizes=(32,), num_words=(32, 64),
+                               wwlls=(False,))
+    return lattice_configs(cells=("gc2t_nn", "gc2t_np", "gc2t_osos"),
+                           word_sizes=(16, 32), num_words=(32, 64, 128),
+                           wwlls=(False, True))
+
+
+def _grid_optimum(cfgs, vdd_scales):
+    """Feasible argmin of the objective over the (rungs x configs) grid.
+    Returns (best objective, (rung, config index), lattice)."""
+    from repro.core import dse_batch
+    lat = dse_batch.evaluate_vdd_lattice(cfgs, list(vdd_scales))
+    feas = dse_batch.feasible_grid(
+        lat.f_max_hz, lat.retention_s, lat.swing_ok, lat.num_words,
+        np.array([DEMAND["target_freq_hz"]]),
+        np.array([DEMAND["target_ret_s"]]))[:, :, 0]
+    obj = np.where(feas, np.asarray(getattr(lat, OBJECTIVE)), np.inf)
+    v, p = np.unravel_index(int(np.argmin(obj)), obj.shape)
+    return float(obj[v, p]), (int(v), int(p)), lat
+
+
+def collect(smoke: bool, dense_rungs: int, steps: int) -> dict:
+    from repro.optim import dse_opt
+
+    cfgs = _lattice(smoke)
+    dense_ladder = np.linspace(0.62, 1.25, dense_rungs)
+
+    t0 = time.time()
+    dense_best, (dv, dp), _ = _grid_optimum(cfgs, dense_ladder)
+    dense_wall = time.time() - t0
+    dense_evals = dense_rungs * len(cfgs)
+
+    t0 = time.time()
+    coarse_best, (cv, cp), _ = _grid_optimum(cfgs, COARSE)
+    r = dse_opt.optimize(cfgs[cp], objective=OBJECTIVE,
+                         knobs=("vdd_scale",), steps=steps,
+                         seed_vdd_scales=COARSE, **DEMAND)
+    grad_wall = time.time() - t0
+    grad_evals = (len(COARSE) * len(cfgs)      # coarse config screen
+                  + r.evals["grid"]            # optimize() re-seeds cfg*
+                  + r.evals["grad_steps"]      # conservative: 1 step = 1
+                  + r.evals["verify"])         # exact verification
+
+    ratio = grad_evals / dense_evals
+    return {
+        "n_configs": len(cfgs),
+        "dense_rungs": dense_rungs,
+        "demand": DEMAND,
+        "objective": OBJECTIVE,
+        "dense": {"best": dense_best, "vdd_scale": float(dense_ladder[dv]),
+                  "config": cfgs[dp].cell, "evals": dense_evals,
+                  "wall_s": round(dense_wall, 3)},
+        "grad": {"best": r.objective_value,
+                 "knobs": dict(r.knobs), "config": cfgs[cp].cell,
+                 "met": r.met, "improved_vs_seed": r.improved,
+                 "coarse_seed_best": coarse_best,
+                 "evals": grad_evals, "evals_detail": dict(r.evals),
+                 "wall_s": round(grad_wall, 3)},
+        "eval_ratio": round(ratio, 4),
+        "objective_ratio": round(r.objective_value / dense_best, 6)
+        if np.isfinite(dense_best) else None,
+        "checks": {
+            "objective_le_grid": bool(
+                r.objective_value <= dense_best * (1 + 1e-9)),
+            "evals_lt_25pct": bool(ratio < 0.25),
+            "met": bool(r.met),
+        },
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small lattice for CI (skips the 25% evals bar)")
+    ap.add_argument("--dense-rungs", type=int, default=24)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args()
+    if args.smoke:
+        args.steps = min(args.steps, 12)
+    res = collect(args.smoke, args.dense_rungs, args.steps)
+    os.makedirs(os.path.join(args.out, "benchmarks"), exist_ok=True)
+    for path in (os.path.join(args.out, "bench_optimize.json"),
+                 os.path.join(args.out, "benchmarks",
+                              "BENCH_optimize.json")):
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+    print(f"bench_optimize: dense {res['dense']['best']:.4g} W in "
+          f"{res['dense']['evals']} evals | grad "
+          f"{res['grad']['best']:.4g} W in {res['grad']['evals']} evals "
+          f"(ratio {res['eval_ratio']})  met={res['grad']['met']}")
+    checks = dict(res["checks"])
+    if args.smoke:
+        # tiny lattice: the fixed gradient-step cost dominates the ratio
+        checks.pop("evals_lt_25pct")
+    return 0 if all(checks.values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

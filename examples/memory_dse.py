@@ -81,12 +81,16 @@ def main():
                   f"(demand {choice['demand_hz']/1e6:.0f}MHz, "
                   f"lifetime {choice['lifetime_s']:.1e}s) -> multi-bank")
 
-    print("== 5. gradient co-optimization for the activation cache ==")
+    print("== 5. differentiable optimization of the activation cache ==")
     res = session.run(OptimizeQuery(
-        target_ret_s=max(prof.act_lifetime_s, 1e-6), steps=200))
-    print(f"  VT={res['write_vt']:.3f}V W={res['w_write_um']:.3f}um "
-          f"boost={res['wwl_boost']:.2f}V -> retention "
-          f"{res['retention_s']:.2e}s (target met: {res.met})")
+        cell="gc2t_np", target_ret_s=max(prof.act_lifetime_s, 1e-6),
+        target_freq_hz=2e8, objective="standby_w",
+        knobs=("vdd_scale", "w_read_scale", "w_write_scale")))
+    kn = res["knobs"]
+    print(f"  vdd x{kn['vdd_scale']:.3f}  w_read x{kn['w_read_scale']:.3f} "
+          f"w_write x{kn['w_write_scale']:.3f} -> "
+          f"standby {res['objective_value']:.3e}W "
+          f"(seed {res['seed_objective_value']:.3e}W, met: {res.met})")
 
     print("== 6. compiling the activation-cache bank ==")
     act = plan.get("activation_cache", {})

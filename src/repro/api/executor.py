@@ -504,10 +504,16 @@ class Executor:
         if n.kind == "optimize":
             self.stats["optimize_calls"] += 1
             sp = n.spec
-            return dse.grad_optimize(
-                sp["cell"], target_ret_s=sp["target_ret_s"],
-                target_freq_hz=sp["target_freq_hz"], steps=sp["steps"],
-                lr=sp["lr"], tech=s.tech)
+            from repro.optim import dse_opt
+            r = dse_opt.optimize(
+                n.cfgs[0], target_freq_hz=sp["target_freq_hz"],
+                target_ret_s=sp["target_ret_s"],
+                objective=sp["objective"], knobs=sp["knobs"],
+                steps=sp["steps"], lr=sp["lr"],
+                seed_vdd_scales=sp["seed_vdd_scales"],
+                allow_refresh=sp["allow_refresh"],
+                seed_lattice=out[n.deps[0]])
+            return r.as_dict()
         raise ValueError(f"unknown node kind {n.kind!r}")
 
     def eval_vdd_lattice(self, n: Node):

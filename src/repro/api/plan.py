@@ -225,14 +225,27 @@ def _plan_compile(session, q: CompileQuery) -> Plan:
 
 
 def _plan_optimize(session, q: OptimizeQuery) -> Plan:
-    spec = {"cell": q.cell, "target_ret_s": q.target_ret_s,
-            "target_freq_hz": q.target_freq_hz, "steps": q.steps,
-            "lr": q.lr}
-    node = Node("optimize",
-                node_key("optimize", session.tech, [sorted(spec.items(),
-                         key=lambda kv: kv[0])]),
-                spec=spec)
-    return Plan(q, [node],
+    # seed ladder as a shared vdd_lattice node: the single-config
+    # (vdd x 1) table dedupes/caches/persists exactly like the co-design
+    # lattices (same session cache, same on-disk artifacts)
+    sweep = SweepQuery(cells=(q.cell,), word_sizes=(q.word_size,),
+                       num_words=(q.num_words,), write_vts=(q.write_vt,),
+                       wwlls=(q.wwlls,))
+    vnode = vdd_lattice_node(session, sweep, q.seed_vdd_scales)
+    cfg = session._adopt(BankConfig(q.word_size, q.num_words, cell=q.cell,
+                                    write_vt=q.write_vt, wwlls=q.wwlls,
+                                    tech=session.tech))
+    spec = {"target_ret_s": q.target_ret_s,
+            "target_freq_hz": q.target_freq_hz, "objective": q.objective,
+            "knobs": q.knobs, "steps": q.steps, "lr": q.lr,
+            "seed_vdd_scales": q.seed_vdd_scales,
+            "allow_refresh": q.allow_refresh}
+    payload = [list(session._key(cfg)),
+               sorted((k, list(v) if isinstance(v, tuple) else v)
+                      for k, v in spec.items()), vnode.key]
+    node = Node("optimize", node_key("optimize", session.tech, payload),
+                cfgs=(cfg,), spec=spec, deps=(vnode.key,))
+    return Plan(q, [vnode, node],
                 lambda s, out: OptimizeResult(out[node.key], q))
 
 

@@ -172,10 +172,76 @@ class CoDesignQuery(Query):
 
 @dataclass(frozen=True)
 class OptimizeQuery(Query):
-    """Continuous co-optimization of (write VT, write width, WWL boost)
-    for a retention target — wraps dse.grad_optimize."""
+    """Gradient-based continuous design optimization of ONE gain-cell
+    bank topology (projected Adam on the differentiable evaluator —
+    `repro.optim.dse_opt` over `repro.core.dse_grad`).
+
+    The discrete vdd ladder is demoted to a global SEED (it shares the
+    session/store `vdd_lattice` artifacts); the continuous `knobs`
+    (operating voltage, device widths, bitline wire width) are then
+    refined under the `dse.feasible` demand constraints
+    (target_freq_hz, target_ret_s), minimizing `objective`. The result
+    is verified with the exact quantized algebra and never regresses
+    vs the seed rung (see dse_opt.optimize).
+
+      cell/word_size/num_words/write_vt/wwlls   the frozen topology
+      target_freq_hz, target_ret_s   the demand (read Hz, lifetime s)
+      objective    any dse_grad output; conventionally one of
+                   dse_opt.OBJECTIVES ("standby_w", "t_read_s",
+                   "e_read_j", "e_write_j")
+      knobs        subset of dse_grad.KNOBS to optimize
+      steps, lr    Adam iterations / learning rate
+      seed_vdd_scales   the coarse ladder rungs seeding the loop
+    """
     cell: str = "gc2t_nn"
+    word_size: int = 32
+    num_words: int = 64
+    write_vt: Optional[str] = None
+    wwlls: bool = False
     target_ret_s: float = 1e-4
-    target_freq_hz: Optional[float] = None
-    steps: int = 300
-    lr: float = 0.02
+    target_freq_hz: float = 1e8
+    objective: str = "standby_w"
+    knobs: Tuple[str, ...] = ("vdd_scale",)
+    steps: int = 60
+    lr: float = 0.05
+    seed_vdd_scales: Tuple[float, ...] = (0.7, 0.85, 1.0, 1.15)
+    allow_refresh: bool = True
+
+    def __post_init__(self):
+        from repro.core.cells import CELLS, Bitcell
+        from repro.core.dse_grad import KNOBS, OUTPUTS
+        object.__setattr__(self, "knobs", tuple(self.knobs))
+        object.__setattr__(self, "seed_vdd_scales",
+                           tuple(float(v) for v in self.seed_vdd_scales))
+        if self.cell not in CELLS:
+            raise ValueError(f"unknown cell {self.cell!r} "
+                             f"(known: {sorted(CELLS)})")
+        if not isinstance(CELLS[self.cell], Bitcell):
+            raise ValueError(f"OptimizeQuery optimizes gain cells; "
+                             f"{self.cell!r} has no retention/width knobs")
+        bad = set(self.knobs) - set(KNOBS)
+        if bad:
+            raise ValueError(f"unknown knobs {sorted(bad)} "
+                             f"(allowed: {KNOBS})")
+        if not self.knobs:
+            raise ValueError("OptimizeQuery needs >= 1 knob")
+        if self.objective not in OUTPUTS:
+            raise ValueError(f"unknown objective {self.objective!r} "
+                             f"(one of {OUTPUTS})")
+        if self.steps <= 0 or self.lr <= 0:
+            raise ValueError(f"steps/lr must be positive, got "
+                             f"steps={self.steps} lr={self.lr}")
+        if self.target_ret_s <= 0 or self.target_freq_hz <= 0:
+            raise ValueError(
+                f"targets must be positive, got target_ret_s="
+                f"{self.target_ret_s} target_freq_hz={self.target_freq_hz}")
+        if not self.seed_vdd_scales or \
+                any(v <= 0 for v in self.seed_vdd_scales):
+            raise ValueError(f"seed_vdd_scales must be positive, got "
+                             f"{self.seed_vdd_scales}")
+        if self.write_vt is not None:
+            wf = CELLS[self.cell].write_flavor
+            if wf.startswith("os") != self.write_vt.startswith("os"):
+                raise ValueError(
+                    f"write_vt {self.write_vt!r} is the wrong device "
+                    f"family for cell {self.cell!r} (write flavor {wf!r})")

@@ -89,6 +89,7 @@ class Session:
         self._vlattices: Dict[tuple, VddLattice] = {}
         self._matches: Dict[tuple, MatchResult] = {}
         self._codesigns: Dict[tuple, CoDesignReport] = {}
+        self._optimizes: Dict[object, "Result"] = {}
         self._executor = Executor(self)
 
     # ------------------------------------------------------------------
@@ -198,7 +199,10 @@ class Session:
             cfg = self._adopt(query.cfg)
             return self._reports.get(
                 (self._key(cfg), query.simulate, query.solver))
-        return None        # OptimizeQuery: uncached, as before
+        if isinstance(query, OptimizeQuery):
+            # frozen + tuple-only fields -> the query is its own key
+            return self._optimizes.get(query)
+        return None
 
     def _result_cache_put(self, query: Query, result: Result) -> None:
         if isinstance(query, SweepQuery):
@@ -207,6 +211,8 @@ class Session:
             self._matches.setdefault(self._match_key(query), result)
         elif isinstance(query, CoDesignQuery):
             self._codesigns.setdefault(self._codesign_key(query), result)
+        elif isinstance(query, OptimizeQuery):
+            self._optimizes.setdefault(query, result)
         # CompileQuery results land in _reports inside the compile node
 
     def _table_from_points(self, query: SweepQuery, points,

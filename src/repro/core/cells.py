@@ -172,3 +172,64 @@ def with_write_vt(cell: Bitcell, flavor: str) -> Bitcell:
     """VT-modulated variant (paper Fig 8c)."""
     return replace(cell, write_flavor=flavor,
                    name=f"{cell.name}:{flavor}")
+
+
+# ---------------------------------------------------------------------------
+# traced variants of the electrical primitives (core/dse_grad.py)
+#
+# The Bitcell methods above return Python floats (`abs(float(i))`) and
+# branch on scalar comparisons — fine for the scalar reference path, but
+# they sever autodiff. These module-level twins mirror the SAME algebra
+# with jnp primitives, taking the continuous knobs (vdd, device widths)
+# as traced arrays so gradients flow; the discrete cell attributes stay
+# Python-level branches (they are static per cell).
+# ---------------------------------------------------------------------------
+
+def v_sn_written_t(cell: Bitcell, tech: TechFile, bit: int, vdd, *,
+                   wwlls=False, wwl_boost=0.55, creep=0.12):
+    """Traced twin of Bitcell.v_sn_written: post-write SN level with the
+    operating voltage `vdd` as a traced array."""
+    wf = cell.wf(tech)
+    vdd = jnp.asarray(vdd)
+    if bit == 0:
+        v = jnp.zeros_like(vdd)
+    else:
+        v_wwl = vdd + (wwl_boost if wwlls else 0.0)
+        v = jnp.minimum(vdd, v_wwl - wf.vt0 + creep)
+    v = v - cell.wwl_couple_ratio * vdd
+    if cell.rwl_active_high:
+        v = v + cell.rwl_couple_ratio * vdd
+    return jnp.maximum(v, 0.0)
+
+
+def i_read_t(cell: Bitcell, tech: TechFile, v_sn, v_rbl, vdd, w_read):
+    """Traced twin of Bitcell.i_read: |I| onto the RBL, with vdd and the
+    read-device width traced."""
+    rf = cell.rf(tech)
+    if rf.polarity > 0:
+        i = dv.channel_current(rf, w_read, cell.l_read,
+                               v_sn, v_rbl, jnp.zeros_like(v_rbl))
+    else:
+        i = dv.channel_current(rf, w_read, cell.l_read, v_sn, vdd, v_rbl)
+    return jnp.abs(i)
+
+
+def i_leak_rbl_t(cell: Bitcell, tech: TechFile, unselected_v_sn, vdd,
+                 w_read):
+    """Traced twin of Bitcell.i_leak_rbl (one unselected cell's off-state
+    RBL leakage)."""
+    rf = cell.rf(tech)
+    if rf.polarity > 0:
+        i = dv.channel_current(rf, w_read, cell.l_read,
+                               unselected_v_sn, vdd * 0.9, vdd)
+    else:
+        i = dv.channel_current(rf, w_read, cell.l_read,
+                               vdd, vdd * 0.1, jnp.zeros_like(vdd))
+    return jnp.abs(i)
+
+
+def sn_cap_t(cell: Bitcell, tech: TechFile, w_read, w_write):
+    """Traced twin of Bitcell.sn_cap with both device widths traced."""
+    rf, wf = cell.rf(tech), cell.wf(tech)
+    return (rf.cg_f_per_um * w_read + wf.cj_f_per_um * w_write
+            + tech.sn_wire_cap_f)

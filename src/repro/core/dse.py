@@ -257,6 +257,13 @@ def pareto(points: List[DesignPoint],
 # gradient-based co-optimization (paper §VI future work, realized)
 # ---------------------------------------------------------------------------
 
+# re-export: the differentiable twin of evaluate() lives in dse_grad (it
+# carries the traced algebra); callers conventionally reach it as
+# dse.evaluate_grad. The projected-Adam optimizer over it is
+# repro.optim.dse_opt (the OptimizeQuery engine).
+from repro.core.dse_grad import evaluate_grad, evaluate_grad_fn  # noqa: E402
+
+
 def grad_optimize(cell_name="gc2t_nn", *, target_ret_s=1e-4,
                   target_freq_hz=None, steps=300, lr=0.02, tech=SYN40,
                   verbose=False) -> dict:

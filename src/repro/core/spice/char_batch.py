@@ -197,6 +197,143 @@ def _characterize_group(cfgs: List[BankConfig], banks, *, n_seg: int,
     return out
 
 
+def t_cell_grad_fn(cfg: BankConfig, *, n_seg: int = 8, n_steps: int = 300,
+                   solver: str = "pallas", precision: str = "f64"):
+    """Differentiable transient read characterization of ONE topology.
+
+    Returns `fn(knobs) -> (t_cell_s (B,), valid (B,))` where `knobs` maps
+    any subset of the continuous design knobs to (B,) arrays:
+
+      vdd_scale     array operating voltage multiplier (techfile
+                    `with_vdd_scale` semantics: rails, written SN level
+                    and stimulus levels scale; sense swing does not)
+      w_read_scale  read-device width multiplier (device current + its
+                    gate/junction caps + the bitline junction load)
+      bl_wire_scale bitline wire WIDTH multiplier (ladder conductance
+                    scales up, wire capacitance scales up)
+
+    The returned fn is traced end-to-end: every knob flows through the
+    MNA assembly, the stimulus waves and the implicit-function VJP of the
+    fused Newton solve (kernels.batched_solve), so `jax.grad` of any
+    reduction of t_cell_s is ONE extra adjoint solve per timestep — not a
+    differentiated unroll. Discretization constants (t0, t_end, step
+    count) are pinned at the NOMINAL design point: they are solver
+    settings, not physics, and freezing them keeps the objective smooth.
+
+    Call under `jax.experimental.enable_x64` (gradients of interpolated
+    crossings through a cond(J)~1e6 system need f64). Gain cells only;
+    solver must be "pallas" or "sparse" (the dense "jnp" path takes no
+    device-parameter overrides).
+    """
+    if solver not in ("pallas", "sparse"):
+        raise ValueError(f"solver {solver!r} not differentiable here "
+                         "(use 'pallas' or 'sparse')")
+    bank0 = build_bank(cfg)
+    if not bank0.is_gc:
+        raise ValueError(f"cell {cfg.cell!r} has no single-ended read "
+                         "column to characterize")
+    tech = cfg.tech
+    cell = bank0.cell
+    key = topology_key(cfg) + (n_seg, n_steps, solver, precision)
+    system, tr, res_stamps, cap_stamps, src_G, meta = _pipeline(bank0, key)
+
+    # -- nominal element values + cap-class decomposition. read_netlist
+    # appends, in order: 4 precharge-device caps (fixed w=1.2), n_seg
+    # ladder caps (c_bl/n_seg each), the SA input cap, 4 read-device caps
+    # (each proportional to w_read). Assert that layout before relying
+    # on it.
+    ckt0, _ = timing_mod.read_netlist(bank0, n_seg=n_seg)
+    g0 = np.array([g for _, _, g in ckt0.res])          # conductances
+    c0 = np.array([c for _, _, c in ckt0.caps])
+    assert len(g0) == n_seg and len(c0) == n_seg + 9, \
+        "read_netlist element layout changed; update t_cell_grad_fn"
+    from repro.core import bank as bank_mod
+    r_bl0, c_bl0 = bank_mod.bitline_rc(bank0)
+    rf = cell.rf(tech)
+    c_junc0 = bank0.rows * rf.cj_f_per_um * cell.w_read  # scales w_read
+    c_wire0 = c_bl0 - c_junc0                            # scales bl width
+    np.testing.assert_allclose(g0, n_seg / r_bl0, rtol=1e-9)
+    np.testing.assert_allclose(c0[4:4 + n_seg], c_bl0 / n_seg, rtol=1e-9)
+
+    d_rd = next(i for i, d in enumerate(ckt0.devs) if d["name"] == "read_dev")
+    w0 = np.array([d["w"] for d in ckt0.devs])
+    n_dev = len(w0)
+
+    # -- static discretization (from the nominal analytic estimate)
+    t_an0 = timing_mod.cell_read_time(bank0)[0]
+    t_end = max(timing_mod.T_END_OVER_ANALYTIC * t_an0,
+                timing_mod.T_END_MIN_S)
+    t0 = timing_mod.T0_FRACTION * t_end
+    # wave TIME grids are static (the stimulus recipe of read_stimulus,
+    # edge-padded to 3 knots); LEVELS are rebuilt traced per point below
+    wt1 = np.array([[0.0, t0, t0 * 1.2],
+                    [0.0, t0 * 0.8, t0],
+                    [0.0, 1.0, 1.0],
+                    [0.0, 1.0, 1.0]])
+    bit = 0 if cell.read_on_sn_low else 1
+    swing = tech.v_sense_se
+    n = system.n
+
+    from repro.core import cells as cells_mod
+
+    def fn(knobs):
+        some = next(iter(knobs.values()))
+        B = some.shape[0]
+        one = jnp.ones((B,), dtype=some.dtype)
+        s_v = jnp.asarray(knobs.get("vdd_scale", one))
+        s_w = jnp.asarray(knobs.get("w_read_scale", one))
+        s_bl = jnp.asarray(knobs.get("bl_wire_scale", one))
+
+        # linear elements: ladder conductance ~ wire width; ladder cap =
+        # wire part ~ width + junction part ~ w_read; device caps of the
+        # read transistor ~ w_read; precharge-device + SA caps fixed
+        g_vals = g0[None, :] * s_bl[:, None]
+        c_lad = (c_wire0 * s_bl + c_junc0 * s_w)[:, None] / n_seg
+        c_vals = jnp.concatenate([
+            jnp.broadcast_to(c0[:4], (B, 4)),
+            jnp.broadcast_to(c_lad, (B, n_seg)),
+            jnp.broadcast_to(c0[4 + n_seg], (B, 1)),
+            c0[None, 4 + n_seg + 1:] * s_w[:, None],
+        ], axis=1)
+        G_b = jnp.asarray(src_G)[None] + jnp.einsum(
+            "br,rij->bij", g_vals, jnp.asarray(res_stamps))
+        C_b = jnp.einsum("bc,cij->bij", c_vals, jnp.asarray(cap_stamps))
+
+        # stimulus levels, traced (same recipe as timing.read_stimulus)
+        vdd = tech.vdd * s_v
+        zero = jnp.zeros_like(vdd)
+        v_sn = cells_mod.v_sn_written_t(cell, tech, bit, vdd,
+                                        wwlls=cfg.wwlls,
+                                        wwl_boost=cfg.wwl_boost)
+        rwl_idle = zero if cell.rwl_active_high else vdd
+        rwl_act = vdd if cell.rwl_active_high else zero
+        v_pre = zero if cell.predischarge else vdd
+        en_idle = vdd if cell.predischarge else zero
+        en_off = zero if cell.predischarge else vdd
+        wv = jnp.stack([
+            jnp.stack([rwl_idle, rwl_idle, rwl_act], axis=1),
+            jnp.stack([en_idle, en_idle, en_off], axis=1),
+            jnp.stack([v_sn, v_sn, v_sn], axis=1),
+            jnp.stack([vdd, vdd, vdd], axis=1),
+        ], axis=1)
+        wt = jnp.broadcast_to(wt1[None], (B, 4, 3))
+
+        w_b = jnp.broadcast_to(w0, (B, n_dev)).at[:, d_rd].set(
+            w0[d_rd] * s_w)
+        v0 = jnp.broadcast_to(v_pre[:, None], (B, n))
+        res = tr.run_lattice(wt, wv, jnp.full((B,), t_end), n_steps,
+                             over_batches={"G": G_b, "C": C_b, "w": w_b},
+                             v0=v0)
+        # per-point sense target via trace shift (crossing_time takes a
+        # scalar target)
+        target = v_pre + (swing if cell.predischarge else -swing)
+        tc, valid = crossing_time(res["t"], res["rbl_near"] - target[:, None],
+                                  0.0, rising=cell.predischarge)
+        return tc - t0, valid
+
+    return fn
+
+
 def characterize(cfgs: Sequence[BankConfig], *, n_steps: int = 300,
                  solver: str = "pallas", n_seg: int = 8,
                  precision: str = "f64"

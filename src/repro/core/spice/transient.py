@@ -257,26 +257,34 @@ class Transient:
         Returns {"all": (B, T, n), "t": (B, T), probes: (B, T)}.
 
         With solver="pallas"/"sparse" the lattice routes to the fused
-        explicit-batch engines (requires "G"/"C" overrides and no
-        device-parameter batches — the char_batch contract).
+        explicit-batch engines: "G"/"C" (B, n, n) matrix overrides plus
+        per-point DEVICE-parameter batches (PARAM_FIELDS names + "ig",
+        each (B, 1) or (B, n_dev)) — the latter feed `pack_params`
+        overrides, which is how the differentiable DSE path threads
+        device-width knobs through a whole characterization.
         """
         if v0 is None:
             v0 = jnp.zeros((self.system.n,))
         over_batches = over_batches or {}
         if self.solver in ("pallas", "sparse"):
-            if set(over_batches) - {"G", "C"}:
+            from repro.kernels.batched_solve.sparse import PARAM_FIELDS
+            dev_allowed = set(PARAM_FIELDS) | {"ig"}
+            bad = set(over_batches) - {"G", "C"} - dev_allowed
+            if bad:
                 raise ValueError(
                     f"solver={self.solver!r} lattice runs support only "
-                    "G/C overrides, got "
-                    f"{sorted(set(over_batches) - {'G', 'C'})}")
+                    "G/C and device-parameter overrides, got "
+                    f"{sorted(bad)}")
             G_b = jnp.asarray(over_batches.get(
                 "G", jnp.broadcast_to(self.system.G,
                                       (len(t_end),) + self.system.G.shape)))
             C_b = jnp.asarray(over_batches.get(
                 "C", jnp.broadcast_to(self.system.C,
                                       (len(t_end),) + self.system.C.shape)))
+            dev_over = {k: jnp.asarray(v) for k, v in over_batches.items()
+                        if k in dev_allowed}
             return self._run_lattice_fused(wt, wv, t_end, n_steps,
-                                           G_b, C_b, v0)
+                                           G_b, C_b, v0, dev_over)
         keys = tuple(sorted(over_batches))
         vals = tuple(jnp.asarray(over_batches[k]) for k in keys)
         t_end = jnp.asarray(t_end, jnp.result_type(float))
@@ -290,12 +298,16 @@ class Transient:
             out[label] = vs[:, :, node - 1]
         return out
 
-    def _fused_fn(self, n_steps: int):
+    def _fused_fn(self, n_steps: int, dev_keys: tuple = ()):
         """Compiled whole-lattice program for the explicit-batch engines:
         precompute everything iteration-constant (and step-constant —
         h is fixed per point, so the linear Jacobian part never changes
-        across the scan), then scan the per-step fused Newton solve."""
-        key = (self.solver, self.precision, int(n_steps))
+        across the scan), then scan the per-step fused Newton solve.
+        `dev_keys` names the per-point device-parameter overrides
+        (static — part of the jit cache key); the whole program is
+        reverse-differentiable w.r.t. G/C/waveforms/t_end/v0 and the
+        device overrides via the implicit-function VJP of the solves."""
+        key = (self.solver, self.precision, int(n_steps), dev_keys)
         hit = self._fused_cache.get(key)
         if hit is not None:
             return hit
@@ -336,7 +348,7 @@ class Transient:
         if self.solver == "sparse":
             sp = spec.sp
 
-            def run(te, wt, wv, v0, G_b, C_b):
+            def run(te, wt, wv, v0, G_b, C_b, dev_vals):
                 B = te.shape[0]
                 h = te / n_steps
                 gn = sp.project_dense(jnp.asarray(G_b, cdt))
@@ -344,12 +356,13 @@ class Transient:
                 j_const = sps.j_constant(spec, gn, cn, h)
                 coh = (cn / h[:, None]).astype(cdt)
                 src_seq = src_sequence(te, wt, wv)
-                params = sps.pack_params(system.dev, B, cdt)
+                params = sps.pack_params(system.dev, B, cdt,
+                                         dict(zip(dev_keys, dev_vals)))
 
                 def body(v, src_t):
                     rhs = sps.coo_matvec(sp, coh, v.astype(cdt)) + src_t
-                    v2, _ = sps.newton_solve(spec, j_const, rhs, params,
-                                             v, iters, tol)
+                    v2 = sps.newton_solve_implicit(
+                        spec, iters, tol, j_const, rhs, params, v)
                     return v2, v2
 
                 v00 = jnp.broadcast_to(v0.astype(sdt), (B, n))
@@ -358,7 +371,7 @@ class Transient:
                 return jnp.swapaxes(vs, 0, 1)
         else:
 
-            def run(te, wt, wv, v0, G_b, C_b):
+            def run(te, wt, wv, v0, G_b, C_b, dev_vals):
                 B = te.shape[0]
                 h = te / n_steps
                 pre = nwt.precompute(spec, G_b, C_b, h)
@@ -367,7 +380,8 @@ class Transient:
                 # K rhs = KCoh @ v_prev + (K @ src) — the source term
                 # for ALL steps in one einsum outside the scan
                 Ksrc = jnp.einsum("bij,btj->bti", pre["K"], src_seq)
-                params = sps.pack_params(system.dev, B, sdt)
+                params = sps.pack_params(system.dev, B, sdt,
+                                         dict(zip(dev_keys, dev_vals)))
 
                 def body(v, Ksrc_t):
                     Krhs = jnp.einsum("bij,bj->bi", pre["KCoh"],
@@ -385,11 +399,15 @@ class Transient:
         self._fused_cache[key] = fn
         return fn
 
-    def _run_lattice_fused(self, wt, wv, t_end, n_steps, G_b, C_b, v0):
+    def _run_lattice_fused(self, wt, wv, t_end, n_steps, G_b, C_b, v0,
+                           dev_over=None):
+        dev_over = dev_over or {}
+        dev_keys = tuple(sorted(dev_over))
         t_end = jnp.asarray(t_end, jnp.result_type(float))
-        fn = self._fused_fn(int(n_steps))
+        fn = self._fused_fn(int(n_steps), dev_keys)
         vs = fn(t_end, jnp.asarray(wt), jnp.asarray(wv),
-                jnp.asarray(v0), G_b, C_b)
+                jnp.asarray(v0), G_b, C_b,
+                tuple(dev_over[k] for k in dev_keys))
         out = {"all": vs,
                "t": (jnp.arange(n_steps) + 1)[None, :]
                * (t_end[:, None] / n_steps)}

@@ -60,12 +60,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.spice.mna import G_MIN, channel_current_and_grads
+from repro.core.spice.mna import (G_MIN, channel_current_and_grads,
+                                  channel_current_raw)
 from repro.kernels.batched_solve.sparse import (PARAM_FIELDS, PRECISIONS,
                                                 pack_params)
 
 __all__ = ["FusedSpec", "build_fused_spec", "precompute", "make_fused_iter",
-           "newton_solve", "newton_solve_fixed", "pack_params"]
+           "newton_solve", "newton_solve_fixed", "pack_params",
+           "residual", "fixed_point_adjoint"]
 
 #: KCL row signs of the channel current (rows a, b, g)
 S_A = np.array([1.0, -1.0, 0.0])
@@ -323,3 +325,104 @@ def newton_solve_fixed(spec: FusedSpec, pre, Krhs, params, v0,
     v, _ = jax.lax.fori_loop(0, iters, body,
                              (v0, jnp.zeros((B,), bool)))
     return v
+
+
+def _gather_safe(x, idx):
+    """(B, n) -> (B, n_dev) terminal values via padded gather; ground
+    terminals (index n) read the zero pad column. Index-array twin of
+    `make_fused_iter`'s statically-unrolled gather — the adjoint path
+    never runs inside Pallas, so dynamic gathers are fine here."""
+    xp = jnp.concatenate([x, jnp.zeros_like(x[:, :1])], axis=1)
+    return xp[:, idx]
+
+
+def residual(spec: FusedSpec, pre, Krhs, params, v):
+    """Preconditioned BE residual F(v) = v - K rhs + (K Pa) i_ab(v)
+    + (K Pg) i_g(v), whose root is the converged Newton state (the
+    iteration's update is dv = M^-1 F, so dv = 0 iff F = 0). Pure
+    elementwise jnp with no freeze masks or loops: the implicit-function
+    adjoint differentiates THIS function w.r.t. the data inputs, never
+    the while_loop that located the root. Casts to compute dtype happen
+    inside so `jax.vjp` hands back cotangents matching the caller's
+    input dtypes (params stays in store dtype on the mixed path)."""
+    _, cdt = spec.dtypes
+    out = v.astype(cdt) - Krhs.astype(cdt)
+    if spec.n_dev == 0:
+        return out
+    vc = v.astype(cdt)
+    vg = _gather_safe(vc, spec.g_safe)
+    va = _gather_safe(vc, spec.a_safe)
+    vb = _gather_safe(vc, spec.b_safe)
+    p = params.astype(cdt)
+    i_ab = channel_current_raw(
+        *(p[:, i] for i in range(len(PARAM_FIELDS))), vg, va, vb)
+    gg = p[:, len(PARAM_FIELDS)]
+    i_g = gg * (vg - 0.5 * (va + vb))
+    return (out
+            + jnp.einsum("bid,bd->bi", pre["KPa"].astype(cdt), i_ab)
+            + jnp.einsum("bid,bd->bi", pre["KPg"].astype(cdt), i_g))
+
+
+def fixed_point_adjoint(spec: FusedSpec, pre, Krhs, params, v_star, v_bar):
+    """Implicit-function VJP through the converged Newton solve.
+
+    At the fixed point F(v*, theta) = 0 (theta = the data inputs pre /
+    Krhs / params), the implicit function theorem gives
+    dv*/dtheta = -M^-1 dF/dtheta with M = dF/dv = I + KU D Vm — the
+    SAME rank-k structure the forward iteration inverts. The adjoint
+    lam = M^-T vbar therefore costs ONE extra Woodbury solve against the
+    transposed capacitance matrix,
+
+        M^-T = I - Vm^T D^T A^-T KU^T,        A = I + D S,
+
+    where A is the identical (B, k, k) matrix `make_fused_iter` builds
+    (assembled here at v*), and theta_bar = -(dF/dtheta)^T lam is one
+    VJP of `residual` at the root. Returns (pre_bar, Krhs_bar,
+    params_bar). The v0 cotangent is zero — the root does not depend on
+    the initial guess, which is what makes the VJP independent of the
+    iteration count past convergence (pinned by a regression test)."""
+    _, cdt = spec.dtypes
+    n_dev, k = spec.n_dev, spec.k
+    vb_c = v_bar.astype(cdt)
+    if n_dev == 0:
+        lam = vb_c
+    else:
+        B = v_star.shape[0]
+        vc = v_star.astype(cdt)
+        vg = _gather_safe(vc, spec.g_safe)
+        va = _gather_safe(vc, spec.a_safe)
+        vb = _gather_safe(vc, spec.b_safe)
+        p = params.astype(cdt)
+        _, di_dvg, di_dva, di_dvb = channel_current_and_grads(
+            *(p[:, i] for i in range(len(PARAM_FIELDS))), vg, va, vb)
+        gg = p[:, len(PARAM_FIELDS)]
+        d3 = jnp.stack([di_dvg, di_dva, di_dvb], axis=2)  # (B, n_dev, 3)
+        Sb = pre["Sb"].astype(cdt)
+        d3S = jnp.einsum("bdj,bdjk->bdk", d3, Sb)
+        egS = (Sb[:, :, 0] - 0.5 * Sb[:, :, 1] - 0.5 * Sb[:, :, 2]) \
+            * gg[:, :, None]
+        DS = jnp.stack([d3S - 0.5 * egS,
+                        -d3S - 0.5 * egS,
+                        egS], axis=2).reshape(B, k, k)
+        A = jnp.eye(k, dtype=cdt)[None] + DS
+        # lam = vbar - Vm^T D^T (A^T)^-1 KU^T vbar
+        y = jnp.einsum("bnk,bn->bk", pre["KU"].astype(cdt), vb_c)
+        u = _solve_small(jnp.swapaxes(A, 1, 2), y, n_dev)
+        u3 = u.reshape(B, n_dev, 3)           # rows (a, b, g) of Um cols
+        sau = u3[:, :, 0] - u3[:, :, 1]                        # s_a . u
+        sgu = u3[:, :, 2] - 0.5 * (u3[:, :, 0] + u3[:, :, 1])  # s_g . u
+        # D^T u over D's column order (g, a, b):
+        #   d3 * (s_a . u) + gg * e_g * (s_g . u)
+        ggs = gg * sgu
+        dtu = d3 * sau[:, :, None] \
+            + jnp.stack([ggs, -0.5 * ggs, -0.5 * ggs], axis=2)
+        corr = jnp.zeros((B, spec.n + 1), cdt)
+        corr = corr.at[:, spec.g_safe].add(dtu[:, :, 0])
+        corr = corr.at[:, spec.a_safe].add(dtu[:, :, 1])
+        corr = corr.at[:, spec.b_safe].add(dtu[:, :, 2])
+        lam = vb_c - corr[:, : spec.n]
+    _, vjp_fn = jax.vjp(
+        lambda pre_, krhs_, params_:
+            residual(spec, pre_, krhs_, params_, v_star),
+        pre, Krhs, params)
+    return vjp_fn(-lam)

@@ -12,8 +12,18 @@ whole-timestep solve (newton.py / fused.py). Backend dispatch: the
 native Pallas kernel on TPU, the identical-result XLA while_loop on
 CPU (interpret-mode Pallas is an emulation — orders of magnitude slower
 than compiled XLA, so it is reserved for the parity tests).
+
+The dispatching solve is wrapped in a `jax.custom_vjp`: neither the
+while_loop fallback nor the Pallas kernel is reverse-differentiable,
+but the converged root is an implicit function of the data inputs, so
+the backward pass is ONE extra Woodbury solve with the transposed
+capacitance matrix (`newton.fixed_point_adjoint`) instead of a
+differentiated unroll. This is what lets energy/delay gradients flow
+through whole transient characterizations (core/dse_grad.py).
 """
 from __future__ import annotations
+
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -28,19 +38,44 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _fused_solve(spec, iters, tol, pre, Krhs, params, v0):
+    """Differentiable fused Newton solve (backend-dispatching primal).
+    spec/iters/tol are static (FusedSpec hashes by identity)."""
+    if jax.default_backend() == "tpu":
+        return _fused_kernel(spec, pre, Krhs, params, v0,
+                             iters=iters, tol=tol, interpret=False)
+    v, _ = _newton.newton_solve(spec, pre, Krhs, params, v0, iters, tol)
+    return v
+
+
+def _fused_solve_fwd(spec, iters, tol, pre, Krhs, params, v0):
+    v = _fused_solve(spec, iters, tol, pre, Krhs, params, v0)
+    return v, (pre, Krhs, params, v)
+
+
+def _fused_solve_bwd(spec, iters, tol, res, v_bar):
+    pre, Krhs, params, v_star = res
+    pre_bar, krhs_bar, params_bar = _newton.fixed_point_adjoint(
+        spec, pre, Krhs, params, v_star, v_bar)
+    return pre_bar, krhs_bar, params_bar, jnp.zeros_like(v_star)
+
+
+_fused_solve.defvjp(_fused_solve_fwd, _fused_solve_bwd)
+
+
 def fused_newton_step(spec, pre, Krhs, params, v0, *, iters, tol,
                       force_kernel: bool = False):
     """One timestep's fused Newton solve -> v (B, n). Routes to the
     Pallas kernel on TPU (or when forced, in interpret mode — the parity
-    tests), else to the bit-identical XLA while_loop fallback."""
-    if jax.default_backend() == "tpu":
-        return _fused_kernel(spec, pre, Krhs, params, v0,
-                             iters=iters, tol=tol, interpret=False)
-    if force_kernel:
+    tests), else to the bit-identical XLA while_loop fallback. Except on
+    the forced-interpret parity path, the result carries the
+    implicit-function VJP, so whole characterizations built on this step
+    are reverse-differentiable."""
+    if force_kernel and jax.default_backend() != "tpu":
         return _fused_kernel(spec, pre, Krhs, params, v0,
                              iters=iters, tol=tol, interpret=True)
-    v, _ = _newton.newton_solve(spec, pre, Krhs, params, v0, iters, tol)
-    return v
+    return _fused_solve(spec, iters, tol, pre, Krhs, params, v0)
 
 
 def batched_solve(J, r, block_b: int = 8):

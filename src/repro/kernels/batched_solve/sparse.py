@@ -36,6 +36,7 @@ while a pure-f32 solve through the cond(J)~1e6 MNA Jacobian is not.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import partial
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -43,7 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.spice.mna import (G_MIN, MNASparsity,
-                                  channel_current_and_grads)
+                                  channel_current_and_grads,
+                                  channel_current_raw)
 
 #: storage/compute dtypes per precision mode
 PRECISIONS: Dict[str, tuple] = {
@@ -75,15 +77,20 @@ class _Step:
     cols: np.ndarray           # col indices j > k with (k, j) present
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, eq=False)
 class LUSchedule:
     """Host-side symbolic LU of one sparsity pattern. `nnz` counts the
     pattern entries, `nnz_f` includes fill-in appended after them (the
-    numeric kernels zero-pad their value vectors to nnz_f)."""
+    numeric kernels zero-pad their value vectors to nnz_f). `entries` is
+    the (nnz_f, 2) list of (row, col) coordinates in value-vector order
+    — what `transpose_perm` maps to solve against J^T on the adjoint
+    path. eq=False: identity hashing, so schedules key host-side caches
+    directly."""
     n: int
     nnz: int
     nnz_f: int
     steps: Tuple[_Step, ...]
+    entries: Optional[np.ndarray] = None
 
 
 def lu_schedule(sp: MNASparsity) -> LUSchedule:
@@ -115,7 +122,40 @@ def lu_schedule(sp: MNASparsity) -> LUSchedule:
             rows=np.array(rows_k, np.int32),
             cols=np.array(cols_k, np.int32)))
     return LUSchedule(n=n, nnz=sp.nnz, nnz_f=len(entries),
-                      steps=tuple(steps))
+                      steps=tuple(steps),
+                      entries=np.array(entries, np.int32).reshape(-1, 2))
+
+
+_TPERM_CACHE: Dict[int, tuple] = {}
+
+
+def transpose_perm(sched: LUSchedule) -> np.ndarray:
+    """Entry permutation mapping a (B, nnz_f) value vector of J onto the
+    value vector of J^T over the SAME schedule: perm[p] = position of
+    (j, i) for entry p = (i, j). Valid because MNA patterns are
+    structurally symmetric (full 3x3 device blocks, symmetric linear
+    stamps, symmetric ground removal), which elimination preserves — so
+    `factor(sched, jvals[:, perm])` is a legitimate LU of J^T and one
+    `solve_factored` yields the adjoint lam = J^-T vbar. Cached per
+    schedule identity (schedules are built once per topology)."""
+    got = _TPERM_CACHE.get(id(sched))
+    if got is not None and got[0] is sched:
+        return got[1]
+    if sched.entries is None:
+        raise ValueError("schedule lacks entry coordinates "
+                         "(rebuild via lu_schedule)")
+    pos = {(int(i), int(j)): p
+           for p, (i, j) in enumerate(sched.entries)}
+    perm = np.empty(sched.nnz_f, np.int32)
+    for p, (i, j) in enumerate(sched.entries):
+        q = pos.get((int(j), int(i)))
+        if q is None:
+            raise ValueError(
+                f"sparsity pattern is not structurally symmetric at "
+                f"({int(i)}, {int(j)}): transpose solve unavailable")
+        perm[p] = q
+    _TPERM_CACHE[id(sched)] = (sched, perm)
+    return perm
 
 
 # ---------------------------------------------------------------------------
@@ -165,11 +205,13 @@ def coo_matvec(sp: MNASparsity, vals, v):
 # the fused Newton iteration
 # ---------------------------------------------------------------------------
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, eq=False)
 class NewtonSpec:
     """Everything static the fused iteration needs: the pattern, its
     symbolic LU, the device terminal index maps and the precision
-    policy. Built once per (topology, precision) by `build_spec`."""
+    policy. Built once per (topology, precision) by `build_spec`.
+    eq=False: identity hashing, so the spec is valid as a custom_vjp
+    nondiff argument / cache key."""
     sp: MNASparsity
     sched: LUSchedule
     didx_g: np.ndarray
@@ -198,14 +240,30 @@ def build_spec(system, sparsity: Optional[MNASparsity] = None,
                       np.asarray(system.didx["b"]), precision)
 
 
-def pack_params(dev: dict, B: int, dtype) -> jnp.ndarray:
+def pack_params(dev: dict, B: int, dtype, overrides=None) -> jnp.ndarray:
     """Device parameter dict -> (B, N_PARAMS, n_dev) operand block
     (PARAM_FIELDS rows + the gate-leak conductance gg as the last row),
     broadcast over the batch. One array keeps the Pallas kernel's ref
-    list flat."""
+    list flat.
+
+    `overrides` maps PARAM_FIELDS names (plus "ig") to per-point values
+    — scalar, (B, 1) or (B, n_dev), broadcastable over the batch — and
+    is the per-lattice-point device-parameter hook the differentiable
+    DSE path threads knobs (device widths, VT) through: gg is recomputed
+    from the possibly-overridden w/ig so a width cotangent reaches the
+    gate-leak row too."""
     n_dev = int(np.shape(dev["pol"])[-1])
-    cols = [jnp.asarray(dev[k], dtype) for k in PARAM_FIELDS]
-    cols.append(jnp.asarray(dev["ig"] * dev["w"] / 1.1, dtype))
+    over = dict(overrides or {})
+    bad = set(over) - set(PARAM_FIELDS) - {"ig"}
+    if bad:
+        raise ValueError(f"unknown device-param overrides {sorted(bad)} "
+                         f"(allowed: {PARAM_FIELDS + ('ig',)})")
+
+    def val(k):
+        return jnp.asarray(over[k] if k in over else dev[k], dtype)
+
+    cols = [val(k) for k in PARAM_FIELDS]
+    cols.append(val("ig") * val("w") / 1.1)
     out = jnp.stack([jnp.broadcast_to(c, (B, n_dev)) for c in cols],
                     axis=1)
     return out
@@ -305,6 +363,128 @@ def newton_solve(spec: NewtonSpec, j_const, rhs, params, v0,
     v, _, n_it = jax.lax.while_loop(
         cond, body, (v0, jnp.zeros((B,), bool), jnp.asarray(0)))
     return v, n_it
+
+
+def _safe_maps(spec: NewtonSpec):
+    """Ground-padded terminal gather indices + KCL scatter maps (host
+    numpy, derived once per spec — identity-cached)."""
+    got = _SAFE_MAPS_CACHE.get(id(spec))
+    if got is not None and got[0] is spec:
+        return got[1]
+    sp = spec.sp
+    g_safe = np.where(spec.didx_g >= 0, spec.didx_g, sp.n)
+    a_safe = np.where(spec.didx_a >= 0, spec.didx_a, sp.n)
+    b_safe = np.where(spec.didx_b >= 0, spec.didx_b, sp.n)
+    row_idx = {"a": spec.didx_a, "b": spec.didx_b, "g": spec.didx_g}
+    row_ok = {k: (idx >= 0) for k, idx in row_idx.items()}
+    row_safe = {k: np.where(ok, row_idx[k], 0)
+                for k, ok in row_ok.items()}
+    maps = (g_safe, a_safe, b_safe, row_ok, row_safe)
+    _SAFE_MAPS_CACHE[id(spec)] = (spec, maps)
+    return maps
+
+
+_SAFE_MAPS_CACHE: Dict[int, tuple] = {}
+
+
+def sparse_residual(spec: NewtonSpec, j_const, rhs, params, v):
+    """BE residual r(v) = J0 v - rhs + device KCL currents, whose root
+    is the converged Newton state. Pure differentiable jnp (no freeze
+    masks / loops): the implicit-function adjoint differentiates THIS,
+    never the while_loop. Casts happen inside so jax.vjp hands back
+    cotangents in the caller's input dtypes."""
+    _, cdt = spec.dtypes
+    sp = spec.sp
+    vc = v.astype(cdt)
+    r = coo_matvec(sp, j_const.astype(cdt), vc) - rhs.astype(cdt)
+    if not spec.n_dev:
+        return r
+    g_safe, a_safe, b_safe, row_ok, row_safe = _safe_maps(spec)
+    B = vc.shape[0]
+    vpad = jnp.concatenate([vc, jnp.zeros((B, 1), cdt)], axis=1)
+    vg, va, vb = vpad[:, g_safe], vpad[:, a_safe], vpad[:, b_safe]
+    p = params.astype(cdt)
+    i_ab = channel_current_raw(
+        *(p[:, i] for i in range(len(PARAM_FIELDS))), vg, va, vb)
+    gg = p[:, len(PARAM_FIELDS)]
+    i_g = gg * (vg - 0.5 * (va + vb))
+    cur = {"a": i_ab - 0.5 * i_g, "b": -i_ab - 0.5 * i_g, "g": i_g}
+    for kk in ("a", "b", "g"):
+        r = r.at[:, row_safe[kk]].add(
+            jnp.where(row_ok[kk][None, :], cur[kk], 0.0))
+    return r
+
+
+def _jac_vals(spec: NewtonSpec, j_const, params, v):
+    """Assemble the (B, nnz_f) Newton Jacobian values J(v) — constant
+    part + device stamps at v, fill entries zero-padded. The adjoint
+    path factors the transpose-permuted copy of exactly these values."""
+    sdt, cdt = spec.dtypes
+    sp, sched = spec.sp, spec.sched
+    n_dev = spec.n_dev
+    jc = j_const.astype(cdt)
+    B = v.shape[0]
+    if n_dev:
+        g_safe, a_safe, b_safe, _, _ = _safe_maps(spec)
+        vc = v.astype(cdt)
+        vpad = jnp.concatenate([vc, jnp.zeros((B, 1), cdt)], axis=1)
+        vg, va, vb = vpad[:, g_safe], vpad[:, a_safe], vpad[:, b_safe]
+        p = params.astype(cdt)
+        _, di_dvg, di_dva, di_dvb = channel_current_and_grads(
+            *(p[:, i] for i in range(len(PARAM_FIELDS))), vg, va, vb)
+        gg = p[:, len(PARAM_FIELDS)]
+        dev_ok = (sp.dev_pos >= 0)
+        dev_safe = np.where(dev_ok, sp.dev_pos, 0).ravel()
+        jac9 = jnp.stack([
+            di_dvg - 0.5 * gg, di_dva + 0.25 * gg, di_dvb + 0.25 * gg,
+            -di_dvg - 0.5 * gg, -di_dva + 0.25 * gg, -di_dvb + 0.25 * gg,
+            gg, -0.5 * gg, -0.5 * gg], axis=1)
+        jc = jc.at[:, dev_safe].add(
+            jnp.where(dev_ok.ravel()[None, :],
+                      jac9.reshape(B, 9 * n_dev), 0.0))
+    if sched.nnz_f > sched.nnz:
+        jc = jnp.concatenate(
+            [jc, jnp.zeros((B, sched.nnz_f - sched.nnz), jc.dtype)],
+            axis=1)
+    return jc
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def newton_solve_implicit(spec: NewtonSpec, iters: int, tol: float,
+                          j_const, rhs, params, v0):
+    """Differentiable sparse-Newton solve: the primal is the ordinary
+    `newton_solve` while_loop; the backward pass is ONE transposed
+    symbolic-LU solve at the root (implicit function theorem) —
+
+        lam = J(v*)^-T vbar,   theta_bar = -(dF/dtheta)^T lam
+
+    — via `transpose_perm` on the same schedule, so gradients cost one
+    extra factor+solve instead of a differentiated unroll. The v0
+    cotangent is zero: the root does not depend on the initial guess,
+    making the VJP independent of iteration count past convergence."""
+    v, _ = newton_solve(spec, j_const, rhs, params, v0, iters, tol)
+    return v
+
+
+def _nsi_fwd(spec, iters, tol, j_const, rhs, params, v0):
+    v = newton_solve_implicit(spec, iters, tol, j_const, rhs, params, v0)
+    return v, (j_const, rhs, params, v)
+
+
+def _nsi_bwd(spec, iters, tol, res, v_bar):
+    j_const, rhs, params, v_star = res
+    _, cdt = spec.dtypes
+    jvals = _jac_vals(spec, j_const, params, v_star)
+    perm = transpose_perm(spec.sched)
+    lam = factor_solve(spec.sched, jvals[:, perm], v_bar.astype(cdt))
+    _, vjp_fn = jax.vjp(
+        lambda jc, r_, p_: sparse_residual(spec, jc, r_, p_, v_star),
+        j_const, rhs, params)
+    jc_bar, rhs_bar, p_bar = vjp_fn(-lam)
+    return jc_bar, rhs_bar, p_bar, jnp.zeros_like(v_star)
+
+
+newton_solve_implicit.defvjp(_nsi_fwd, _nsi_bwd)
 
 
 def j_constant(spec: NewtonSpec, gn, cn, h):

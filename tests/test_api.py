@@ -117,10 +117,20 @@ def test_results_write_uniformly(tmp_path):
     m.write(str(tmp_path))
     data = json.load(open(tmp_path / m.filename))
     assert data["banks_needed"]["L1:toy"] == 1
-    o = s.run(OptimizeQuery(target_ret_s=1e-6, steps=40))
+    o = s.run(OptimizeQuery(target_ret_s=1e-6, steps=10))
     o.write(str(tmp_path))
     data = json.load(open(tmp_path / o.filename))
     assert "write_vt" in data
+    assert data["objective"] == "standby_w"
+    assert "vdd_scale" in data["knobs"]
+    # only the requested knob moves; the rest stay at nominal
+    assert all(data["knobs"][k] == 1.0 for k in data["knobs"]
+               if k != "vdd_scale")
+    assert data["met"] is True
+    # never-regress contract: final objective <= the grid-seed rung's
+    assert data["objective_value"] <= data["seed_objective_value"] * (1 + 1e-12)
+    # the whole result is memoized on the frozen query
+    assert s.run(OptimizeQuery(target_ret_s=1e-6, steps=10)) is o
     assert all(isinstance(r, Result) for r in (table, m, o))
 
 

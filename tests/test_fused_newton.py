@@ -96,14 +96,17 @@ def test_mixed_precision_holds_parity_contract():
         assert float(np.max(rel)) <= 0.01
 
 
-def test_fused_rejects_device_param_batches():
+def test_fused_rejects_unknown_override_batches():
+    """Device-parameter overrides ("w", "vt0", ... — the differentiable
+    DSE path) are accepted alongside G/C; anything else still fails
+    loudly instead of being silently dropped."""
     with enable_x64():
         system, inp = _lattice_inputs()
         tr = Transient(system, solver="pallas")
-        with pytest.raises(ValueError, match="G/C overrides"):
+        with pytest.raises(ValueError, match="overrides"):
             tr.run_lattice(inp["wt"], inp["wv"], inp["t_end"], 10,
                            over_batches={"G": inp["G_b"],
-                                         "w": np.ones((3, 4))})
+                                         "bogus": np.ones((3, 4))})
 
 
 # ---------------------------------------------------------------------------
