@@ -1,0 +1,197 @@
+"""Benchmark: batched layout extraction vs the per-point geometry
+reference, plus the analytic-vs-extracted fidelity scorecard.
+
+    PYTHONPATH=src python benchmarks/bench_layout.py [--repeats 1]
+    PYTHONPATH=src python benchmarks/bench_layout.py --smoke   # CI
+
+Three sections:
+
+  extract  — a design lattice (64 points full, 16 smoke) through BOTH
+             extraction paths: the per-point reference (place + route +
+             `extract_point` over routed geometry) and the closed-form
+             struct-of-arrays `extract_lattice` (no geometry built).
+             Reports wall times, speedup, and asserts every point
+             BIT-identical between the two paths.
+  scorecard— per gain-cell topology at 16x64: hand-modeled vs extracted
+             read-column R/C, the analytic t_cell correction, and the
+             TRANSIENT t_cell gap (characterize with parasitics=
+             "modeled" vs "extracted", same solver/steps) — the number
+             the layout tier exists to produce.
+  verify   — full verify_bank (DRC + LVS-lite + bit-parity) over the
+             scorecard configs; everything must come back clean.
+
+Checks recorded (the PR's acceptance bar):
+  * extract_bit_identical   — batched == per-point on every lattice point
+  * transient_gap_le_10pct  — extracted-parasitic transient t_cell
+                              within 10% of the hand-modeled ladder
+  * geometry_all_clean      — DRC clean + LVS ok on every verified bank
+
+Writes results/bench_layout.json (uploaded by CI) and mirrors it to
+results/benchmarks/BENCH_layout.json for the benchmark index.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def _lattice(smoke: bool):
+    from repro.core.dse import lattice_configs
+    if smoke:
+        return lattice_configs(cells=("gc2t_nn", "gc2t_osos"),
+                               word_sizes=(8, 16), num_words=(32, 64),
+                               wwlls=(False,))
+    return lattice_configs(cells=("gc2t_nn", "gc2t_np", "gc2t_osos",
+                                  "gc3t"),
+                           word_sizes=(8, 16, 32, 64),
+                           num_words=(32, 64),
+                           wwlls=(False, True))
+
+
+def _bench_extract(cfgs, repeats: int) -> dict:
+    from repro.core.bank import build_bank
+    from repro.geom import extract_lattice, extract_point, place_bank, \
+        route_bank
+
+    banks = [build_bank(c) for c in cfgs]
+
+    def point_path():
+        return [extract_point(route_bank(place_bank(b))) for b in banks]
+
+    def lattice_path():
+        return extract_lattice(banks)
+
+    walls_p, walls_l = [], []
+    points = lat = None
+    for _ in range(repeats + 1):
+        t0 = time.time()
+        points = point_path()
+        walls_p.append(time.time() - t0)
+        t0 = time.time()
+        lat = lattice_path()
+        walls_l.append(time.time() - t0)
+    wall_p = min(walls_p[1:]) if len(walls_p) > 1 else walls_p[0]
+    wall_l = min(walls_l[1:]) if len(walls_l) > 1 else walls_l[0]
+
+    mismatches = sum(
+        1 for i, pt in enumerate(points)
+        if any(v != float(lat[k][i]) for k, v in pt.items()))
+    return {
+        "n_points": len(cfgs),
+        "point_wall_s": round(wall_p, 4),
+        "lattice_wall_s": round(wall_l, 5),
+        "speedup": round(wall_p / max(wall_l, 1e-9), 1),
+        "bit_mismatches": mismatches,
+    }
+
+
+def _scorecard(n_steps: int) -> list:
+    from repro.core import bank as bank_mod
+    from repro.core import timing
+    from repro.core.bank import BankConfig, build_bank
+    from repro.core.spice.char_batch import characterize
+    from repro.geom import extract as gx
+
+    cfgs = [BankConfig(16, 64, cell=c)
+            for c in ("gc2t_nn", "gc2t_np", "gc2t_osos", "gc3t",
+                      "gc2t_hyb")]
+    modeled = characterize(cfgs, n_steps=n_steps)
+    extracted = characterize(cfgs, n_steps=n_steps,
+                             parasitics="extracted")
+    rows = []
+    for cfg, cm, ce in zip(cfgs, modeled, extracted):
+        bank = build_bank(cfg)
+        rc = gx.read_column_rc(bank)
+        r_hand, c_hand = bank_mod.bitline_rc(bank)
+        t_hand = timing.cell_read_time(bank)[0]
+        t_ext = timing.cell_read_time(
+            bank, rc=(rc["bl_r_ohm"], rc["bl_c_f"]))[0]
+        gap = abs(ce.t_cell_s - cm.t_cell_s) / cm.t_cell_s
+        rows.append({
+            "cell": cfg.cell, "rows": bank.rows,
+            "bl_r_ratio": round(rc["bl_r_ohm"] / r_hand, 3),
+            "bl_c_ratio": round(rc["bl_c_f"] / c_hand, 3),
+            "bl_length_nm": round(rc["bl_length_nm"], 1),
+            "n_vias": int(rc["n_vias"]),
+            "t_cell_analytic_modeled_s": float(f"{t_hand:.4g}"),
+            "t_cell_analytic_extracted_s": float(f"{t_ext:.4g}"),
+            "analytic_correction": round((t_ext - t_hand) / t_hand, 4),
+            "t_cell_sim_modeled_s": float(f"{cm.t_cell_s:.4g}"),
+            "t_cell_sim_extracted_s": float(f"{ce.t_cell_s:.4g}"),
+            "transient_gap": round(gap, 4),
+            "swing_ok": bool(cm.swing_ok and ce.swing_ok),
+        })
+    return rows
+
+
+def _verify(rows) -> dict:
+    from repro.core.bank import BankConfig
+    from repro.geom import verify_bank
+
+    reports = [verify_bank(BankConfig(16, 64, cell=r["cell"]))
+               for r in rows]
+    return {
+        "n_verified": len(reports),
+        "n_drc_clean": sum(r["drc_clean"] for r in reports),
+        "n_lvs_ok": sum(r["lvs_ok"] for r in reports),
+        "n_bit_identical": sum(r["extract_bit_identical"]
+                               for r in reports),
+        "all_clean": all(r["drc_clean"] and r["lvs_ok"]
+                         and r["extract_bit_identical"]
+                         for r in reports),
+    }
+
+
+def collect(repeats: int = 1, smoke: bool = False, n_steps: int = 300
+            ) -> dict:
+    cfgs = _lattice(smoke)
+    extract = _bench_extract(cfgs, repeats)
+    scorecard = _scorecard(n_steps)
+    verify = _verify(scorecard)
+    worst_gap = max(r["transient_gap"] for r in scorecard)
+    return {
+        "extract": extract,
+        "scorecard": scorecard,
+        "verify": verify,
+        "n_steps": n_steps,
+        "worst_transient_gap": worst_gap,
+        "checks": {
+            "extract_bit_identical": extract["bit_mismatches"] == 0,
+            "transient_gap_le_10pct": worst_gap <= 0.10,
+            "geometry_all_clean": verify["all_clean"],
+        },
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small lattice for CI")
+    ap.add_argument("--n-steps", type=int, default=300)
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args()
+    res = collect(args.repeats, smoke=args.smoke, n_steps=args.n_steps)
+    os.makedirs(os.path.join(args.out, "benchmarks"), exist_ok=True)
+    for path in (os.path.join(args.out, "bench_layout.json"),
+                 os.path.join(args.out, "benchmarks",
+                              "BENCH_layout.json")):
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+    ex = res["extract"]
+    print(f"bench_layout: extraction {ex['n_points']} pts  "
+          f"geometry {ex['point_wall_s']}s  batched {ex['lattice_wall_s']}s "
+          f"({ex['speedup']}x)  bit mismatches {ex['bit_mismatches']}")
+    for r in res["scorecard"]:
+        print(f"  {r['cell']:10s} R x{r['bl_r_ratio']:<5} "
+              f"C x{r['bl_c_ratio']:<5} analytic {r['analytic_correction']:+.1%}"
+              f"  transient gap {r['transient_gap']:.2%}")
+    print(f"  verify: {res['verify']}  worst transient gap "
+          f"{res['worst_transient_gap']:.2%}")
+    return 0 if all(res["checks"].values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

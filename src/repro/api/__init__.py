@@ -21,7 +21,11 @@ through the struct-of-arrays `jax.vmap` evaluator in
 the batched Newton transient engine (`repro.core.spice.char_batch`)
 simulates every gain-cell read column, one compiled program per cell
 topology, and the returned `CalibratedTable` reports the
-analytic-vs-transient error per point.
+analytic-vs-transient error per point. `SweepQuery(fidelity="layout")`
+escalates once more: every bank is placed + routed + DRC/LVS-verified
+(`repro.geom`) and the transient engine runs on the layout-EXTRACTED
+read-column parasitics, returning a `LayoutTable` that carries the
+per-point geometry verification reports.
 
 `CoDesignQuery` closes the loop between the two halves of the repo: it
 consumes AI-workload Profiles from `repro.workloads.profiler`, evaluates
@@ -53,15 +57,15 @@ from repro.api.leases import Lease, LeaseManager
 from repro.api.queries import (CoDesignQuery, CompileQuery, MatchQuery,
                                OptimizeQuery, Query, SweepQuery)
 from repro.api.results import (CalibratedTable, CoDesignReport,
-                               CompileResult, DesignTable, MatchResult,
-                               OptimizeResult, Result)
+                               CompileResult, DesignTable, LayoutTable,
+                               MatchResult, OptimizeResult, Result)
 from repro.api.session import Session
 from repro.api.store import ArtifactStore
 
 __all__ = [
     "Session", "Query", "CompileQuery", "SweepQuery", "MatchQuery",
     "CoDesignQuery", "OptimizeQuery", "Result", "CompileResult",
-    "DesignTable", "CalibratedTable", "MatchResult", "CoDesignReport",
-    "OptimizeResult", "Executor", "QueryFuture", "ArtifactStore",
-    "Lease", "LeaseManager",
+    "DesignTable", "CalibratedTable", "LayoutTable", "MatchResult",
+    "CoDesignReport", "OptimizeResult", "Executor", "QueryFuture",
+    "ArtifactStore", "Lease", "LeaseManager",
 ]

@@ -16,7 +16,9 @@ as (query, future) pairs and drain in ADMISSION WAVES. One wave:
      grouping and power-of-two bucketing; scalar nodes loop), walked in
      submission order so shared points are computed exactly as a
      sequential `Session.run` series would compute them. `transient`
-     nodes union the same way per (sim_steps, solver, precision).
+     nodes union the same way per (sim_steps, solver, precision,
+     parasitics) — the layout tier's extracted-parasitics runs never
+     mix batches with hand-modeled ones.
   4. execute: remaining nodes run dependencies-first, consulting the
      session caches and the on-disk artifact store
      (`repro.api.store`) before any device work, persisting fresh
@@ -357,14 +359,16 @@ class Executor:
     def _coalesce_transient(self, tnodes: List[Node], err: dict) -> None:
         s = self.session
         leases = self._leases
-        groups: Dict[tuple, list] = {}  # (steps, solver, precision) -> [cfg]
+        # (steps, solver, precision, parasitics) -> [cfg]
+        groups: Dict[tuple, list] = {}
         owners: Dict[tuple, set] = {}
         claimed = set()
         held = {}                             # node key -> Lease
         waiting = []                          # [(node, mode)] foreign
         for n in tnodes:
             mode = (n.spec["sim_steps"], n.spec["solver"],
-                    n.spec.get("precision", "f64"))
+                    n.spec.get("precision", "f64"),
+                    n.spec.get("parasitics", "modeled"))
             tkeys = [(s._key(c),) + mode for c in n.cfgs]
             missing = [(c, tk) for c, tk in zip(n.cfgs, tkeys)
                        if tk not in s._tchars]
@@ -396,7 +400,7 @@ class Executor:
             try:
                 chars = char_batch.characterize(
                     cfgs, n_steps=mode[0], solver=mode[1],
-                    precision=mode[2])
+                    precision=mode[2], parasitics=mode[3])
                 for c, ch in zip(cfgs, chars):
                     s._tchars[(s._key(c),) + mode] = ch
             except Exception as e:                       # noqa: BLE001
@@ -411,7 +415,8 @@ class Executor:
             try:
                 if n.key not in err:
                     mode = (n.spec["sim_steps"], n.spec["solver"],
-                    n.spec.get("precision", "f64"))
+                            n.spec.get("precision", "f64"),
+                            n.spec.get("parasitics", "modeled"))
                     chars = [s._tchars[(s._key(c),) + mode]
                              for c in n.cfgs]
                     self._store_put(
@@ -448,7 +453,7 @@ class Executor:
                 self.stats["char_calls"] += 1
                 chars = char_batch.characterize(
                     cfgs, n_steps=mode[0], solver=mode[1],
-                    precision=mode[2])
+                    precision=mode[2], parasitics=mode[3])
                 for c, ch in zip(cfgs, chars):
                     s._tchars[(s._key(c),) + mode] = ch
             allchars = [s._tchars[(s._key(c),) + mode] for c in n.cfgs]
@@ -474,10 +479,31 @@ class Executor:
             return pts
         if n.kind == "transient":
             mode = (n.spec["sim_steps"], n.spec["solver"],
-                    n.spec.get("precision", "f64"))
+                    n.spec.get("precision", "f64"),
+                    n.spec.get("parasitics", "modeled"))
             chars = [s._tchars[(s._key(c),) + mode] for c in n.cfgs]
             self._store_put(n.key, lambda: plan_mod.encode_chars(s, chars))
             return chars
+        if n.kind == "geom":
+            n_seg = int(n.spec.get("n_seg", 8))
+            missing = [c for c in n.cfgs
+                       if (s._key(c), n_seg) not in s._geoms]
+            if missing:
+                reports = self._store_decode(n.key, plan_mod.decode_geoms)
+                if reports:
+                    for c, g in zip(n.cfgs, reports):
+                        s._geoms.setdefault((s._key(c), n_seg), g)
+                    missing = [c for c in missing
+                               if (s._key(c), n_seg) not in s._geoms]
+            if missing:
+                from repro.geom import verify as geom_verify
+                self.stats["geom_verifies"] += len(missing)
+                for c in missing:
+                    s._geoms[(s._key(c), n_seg)] = \
+                        geom_verify.verify_bank(c, n_seg=n_seg)
+            geoms = [s._geoms[(s._key(c), n_seg)] for c in n.cfgs]
+            self._store_put(n.key, lambda: plan_mod.encode_geoms(s, geoms))
+            return geoms
         if n.kind == "vdd_lattice":
             return self.eval_vdd_lattice(n)
         if n.kind == "shmoo":

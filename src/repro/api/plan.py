@@ -6,9 +6,10 @@ execution splits every query into two halves:
 
   * a small DAG of `Node`s naming the device-side work — config-lattice
     evaluation (`points`), transient characterization (`transient`),
-    the (vdd x lattice) table (`vdd_lattice`), the shmoo grid
-    (`shmoo`), the co-design cube (`codesign_cube`), one-bank
-    compilation (`compile`) and gradient optimization (`optimize`);
+    geometry verification for the layout tier (`geom`), the
+    (vdd x lattice) table (`vdd_lattice`), the shmoo grid (`shmoo`),
+    the co-design cube (`codesign_cube`), one-bank compilation
+    (`compile`) and gradient optimization (`optimize`);
   * a pure-host `compose` step that assembles the query's Result from
     the node outputs (select/compose: pick banks, size macros, build
     tables) — byte-for-byte the assembly the eager methods performed.
@@ -146,18 +147,32 @@ def _plan_sweep(session, q: SweepQuery) -> Plan:
     pnode = Node("points", node_key("points", session.tech, pkeys),
                  cfgs=cfgs, spec={"batched": q.batched})
     nodes = [pnode]
-    tnode = None
-    if q.fidelity == "transient":
+    tnode = gnode = None
+    if q.fidelity in ("transient", "layout"):
+        parasitics = "extracted" if q.fidelity == "layout" else "modeled"
+        payload = [pkeys, q.sim_steps, q.solver, q.precision]
+        if parasitics != "modeled":
+            # appended only for the layout tier, so stored hand-modeled
+            # transient artifacts keep their pre-layout keys
+            payload.append(parasitics)
         tnode = Node(
-            "transient",
-            node_key("transient", session.tech,
-                     [pkeys, q.sim_steps, q.solver, q.precision]),
+            "transient", node_key("transient", session.tech, payload),
             cfgs=cfgs, spec={"sim_steps": q.sim_steps, "solver": q.solver,
-                             "precision": q.precision})
+                             "precision": q.precision,
+                             "parasitics": parasitics})
         nodes.append(tnode)
+    if q.fidelity == "layout":
+        # geometry build + DRC/LVS + scalar-vs-batched extraction parity,
+        # one verification report per config (repro.geom.verify)
+        gnode = Node("geom", node_key("geom", session.tech, pkeys),
+                     cfgs=cfgs, spec={"n_seg": 8})
+        nodes.append(gnode)
 
     def compose(s, out):
         chars = out[tnode.key] if tnode is not None else None
+        if gnode is not None:
+            return s._table_from_points(q, out[pnode.key], chars,
+                                        geoms=out[gnode.key])
         return s._table_from_points(q, out[pnode.key], chars)
 
     return Plan(q, nodes, compose)
@@ -374,6 +389,16 @@ def decode_chars(session, data) -> List[Optional[TransientChar]]:
     return [None if d is None else
             TransientChar(session._cfg_from_key(tuple(d["cfg"])),
                           *(d[f] for f in _CHAR_FIELDS)) for d in data]
+
+
+def encode_geoms(session, geoms) -> list:
+    """Geometry verification reports (repro.geom.verify.verify_bank) are
+    already JSON-able dicts of ints/floats/bools/strings."""
+    return [None if g is None else dict(g) for g in geoms]
+
+
+def decode_geoms(session, data) -> list:
+    return [None if g is None else dict(g) for g in data]
 
 
 _VLAT_2D = ("f_max_hz", "t_read_s", "t_write_s", "retention_s",

@@ -58,6 +58,15 @@ class SweepQuery(Query):
                   the dense f64 reference. precision "f64" (default) |
                   "mixed" (f32 carried traces, f64 model + solve — passes
                   the 1% scalar-parity contract) | "f32" (screening only).
+      "layout"  — the transient tier driven by LAYOUT-EXTRACTED
+                  parasitics instead of the hand-modeled wire RC: every
+                  point's bank is placed + routed + DRC/LVS-verified by
+                  `repro.geom` (one batched struct-of-arrays extraction
+                  per topology group replaces `core.bank.bitline_rc`),
+                  and the result is a LayoutTable carrying the per-point
+                  geometry verification reports alongside the transient
+                  characterization. sim_steps/solver/precision apply as
+                  in "transient".
     """
     cells: Tuple[str, ...] = ("gc2t_nn", "gc2t_np", "gc2t_osos")
     word_sizes: Tuple[int, ...] = (16, 32, 64, 128)
@@ -74,16 +83,18 @@ class SweepQuery(Query):
         for f in ("cells", "word_sizes", "num_words", "write_vts",
                   "wwlls"):
             object.__setattr__(self, f, tuple(getattr(self, f)))
-        if self.fidelity not in ("analytic", "transient"):
-            raise ValueError(f"unknown SweepQuery fidelity "
-                             f"{self.fidelity!r} (analytic | transient)")
+        if self.fidelity not in ("analytic", "transient", "layout"):
+            raise ValueError(
+                f"unknown SweepQuery fidelity {self.fidelity!r} "
+                "(analytic | transient | layout)")
         if self.solver not in ("jnp", "pallas", "sparse"):
             raise ValueError(f"unknown SweepQuery solver {self.solver!r} "
                              "(jnp | pallas | sparse)")
         if self.precision not in ("f64", "mixed", "f32"):
             raise ValueError(f"unknown SweepQuery precision "
                              f"{self.precision!r} (f64 | mixed | f32)")
-        if self.fidelity == "transient" and self.precision == "f32":
+        if self.fidelity in ("transient", "layout") and \
+                self.precision == "f32":
             # pure-f32 solves through the cond(J)~1e6 MNA Jacobian are
             # outside the parity contract (docs/fidelity-tiers.md);
             # "mixed" keeps the model + solve in f64 and passes it

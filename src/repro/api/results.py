@@ -121,6 +121,45 @@ class CalibratedTable(DesignTable):
 
 
 @dataclass
+class LayoutTable(CalibratedTable):
+    """A CalibratedTable whose transient characterization ran on
+    LAYOUT-EXTRACTED parasitics — the result of
+    `SweepQuery(fidelity="layout")`.
+
+    `geometry[i]` aligns with `points[i]`: the
+    `repro.geom.verify.verify_bank` report of that config's placed +
+    routed bank (manifest stats, DRC verdict, LVS-lite connectivity
+    verdict, extracted read-column RC, scalar-vs-batched extraction
+    bit-parity). `geometry_summary()` rolls the verdicts up — the
+    all-clean gate `tools/check_geom.py` enforces in CI."""
+    geometry: List[Optional[dict]] = field(default_factory=list)
+    filename = "layout_table.json"
+
+    def geometry_summary(self) -> dict:
+        gs = [g for g in self.geometry if g is not None]
+        return {
+            "n_points": len(self.points),
+            "n_verified": len(gs),
+            "n_drc_clean": sum(bool(g.get("drc_clean")) for g in gs),
+            "n_lvs_ok": sum(bool(g.get("lvs_ok")) for g in gs),
+            "n_extract_bit_identical": sum(
+                bool(g.get("extract_bit_identical")) for g in gs),
+            "all_clean": all(
+                g.get("drc_clean") and g.get("lvs_ok")
+                and g.get("extract_bit_identical") for g in gs),
+        }
+
+    def as_dict(self):
+        out = super().as_dict()
+        for i, row in enumerate(out["rows"]):
+            g = self.geometry[i] if i < len(self.geometry) else None
+            if g is not None:
+                row["geometry"] = g
+        out["geometry_summary"] = self.geometry_summary()
+        return out
+
+
+@dataclass
 class MatchResult(Result):
     """Shmoo of the lattice against workload demands + multibank sizing."""
     grid: Dict[str, Dict[str, bool]]

@@ -46,8 +46,8 @@ from repro.api.executor import Executor, QueryFuture
 from repro.api.queries import (CoDesignQuery, CompileQuery, MatchQuery,
                                OptimizeQuery, Query, SweepQuery)
 from repro.api.results import (CalibratedTable, CoDesignReport,
-                               CompileResult, DesignTable, MatchResult,
-                               Result)
+                               CompileResult, DesignTable, LayoutTable,
+                               MatchResult, Result)
 from repro.api.store import ArtifactStore
 from repro.api import plan as plan_mod
 from repro.core import dse
@@ -80,9 +80,13 @@ class Session:
         self._tables: Dict[tuple, DesignTable] = {}
         self._reports: Dict[tuple, CompileResult] = {}
         # per-config transient characterizations, keyed by
-        # (config key, sim_steps, solver, precision) — shared between overlapping
-        # transient-fidelity sweeps exactly like the analytic points
+        # (config key, sim_steps, solver, precision, parasitics) —
+        # shared between overlapping transient/layout-fidelity sweeps
+        # exactly like the analytic points
         self._tchars: Dict[tuple, object] = {}
+        # per-config geometry verification reports (layout tier), keyed
+        # by (config key, n_seg)
+        self._geoms: Dict[tuple, dict] = {}
         # (lattice fields, vdd_scales) -> VddLattice; match results and
         # co-design reports by their shaping fields (_match_key /
         # _codesign_key)
@@ -168,8 +172,8 @@ class Session:
     @classmethod
     def _table_key(cls, sweep: SweepQuery) -> tuple:
         base = cls._lattice_key(sweep)
-        if sweep.fidelity == "transient":
-            return base + ("transient", sweep.sim_steps, sweep.solver,
+        if sweep.fidelity in ("transient", "layout"):
+            return base + (sweep.fidelity, sweep.sim_steps, sweep.solver,
                            sweep.precision)
         return base + ("analytic",)
 
@@ -216,14 +220,17 @@ class Session:
         # CompileQuery results land in _reports inside the compile node
 
     def _table_from_points(self, query: SweepQuery, points,
-                           chars=None) -> DesignTable:
+                           chars=None, geoms=None) -> DesignTable:
         """Build (or return the cached) table for an evaluated lattice —
         the compose step of SweepQuery plans."""
         tkey = self._table_key(query)
         hit = self._tables.get(tkey)
         if hit is not None:
             return hit
-        if query.fidelity == "transient":
+        if query.fidelity == "layout":
+            table = LayoutTable(list(points), query, list(chars),
+                                list(geoms))
+        elif query.fidelity == "transient":
             table = CalibratedTable(list(points), query, list(chars))
         else:
             table = DesignTable(list(points), query)
@@ -255,7 +262,11 @@ class Session:
 
         fidelity="analytic" returns a DesignTable; fidelity="transient"
         additionally runs the topology-grouped batched transient engine
-        over every gain-cell point and returns a CalibratedTable.
+        over every gain-cell point and returns a CalibratedTable;
+        fidelity="layout" drives that engine with layout-extracted
+        parasitics and returns a LayoutTable that also carries every
+        point's geometry verification report (DRC + LVS-lite +
+        extraction bit-parity, repro.geom).
 
         Goes straight to the planned path (NOT through run()'s
         subclass-override dispatch), so a legacy subclass whose run()

@@ -47,17 +47,21 @@ PACK_FACTOR = 1.6         # packed (BEOL-under-array) floorplan: routing
                           # overhead without the strip whitespace
 
 
-def cell_area_um2(tech: TechFile, geom_key: str) -> float:
-    g = tech.cell_geoms[geom_key]
-    w = g["poly_pitches"] * tech.cpp
-    h = g["tracks"] * tech.track
-    return w * h * (1.0 + g["margin"]) * UM2_PER_NM2
-
-
 def cell_wh_nm(tech: TechFile, geom_key: str):
+    """Drawn cell width/height in nm. The DRC margin is isotropic —
+    sqrt(1+margin) on each dimension — so the w/h aspect ratio stays the
+    drawn (poly pitches x tracks) ratio; the old form lumped the whole
+    margin onto the width, which skewed wordline-vs-bitline lengths."""
     g = tech.cell_geoms[geom_key]
-    return (g["poly_pitches"] * tech.cpp * (1 + g["margin"]),
-            g["tracks"] * tech.track)
+    s = (1.0 + g["margin"]) ** 0.5
+    return (g["poly_pitches"] * tech.cpp * s, g["tracks"] * tech.track * s)
+
+
+def cell_area_um2(tech: TechFile, geom_key: str) -> float:
+    """Defined as the EXACT product of cell_wh_nm (tests assert
+    w * h == area bitwise — one source of truth for cell footprint)."""
+    w, h = cell_wh_nm(tech, geom_key)
+    return w * h * UM2_PER_NM2
 
 
 def module_area_um2(tech: TechFile, kind: str, n: int = 1) -> float:

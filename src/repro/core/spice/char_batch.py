@@ -115,12 +115,22 @@ def _pipeline(bank0, key: tuple):
 
 def _characterize_group(cfgs: List[BankConfig], banks, *, n_seg: int,
                         n_steps: int, solver: str,
-                        precision: str = "f64") -> List[TransientChar]:
+                        precision: str = "f64",
+                        parasitics: str = "modeled") -> List[TransientChar]:
     bank0 = banks[0]
     tech = cfgs[0].tech
     cell = bank0.cell
     key = topology_key(cfgs[0]) + (n_seg, n_steps, solver, precision)
     system, tr, res_stamps, cap_stamps, src_G, meta = _pipeline(bank0, key)
+
+    # parasitics="extracted" (the layout tier): ONE batched extraction
+    # over the group replaces the hand-modeled bitline ladder totals.
+    # Via R/C folds uniformly into the n_seg segments, so the element
+    # structure — and with it the compiled pipeline — is unchanged.
+    ext = None
+    if parasitics == "extracted":
+        from repro.geom import extract as geom_extract
+        ext = geom_extract.extract_lattice(banks)
 
     # -- lift structural values into per-point parameter arrays. The
     # per-point netlist builder is the single source of truth for element
@@ -130,13 +140,15 @@ def _characterize_group(cfgs: List[BankConfig], banks, *, n_seg: int,
     c_vals = np.zeros((len(banks), len(cap_stamps)))
     t_an = np.zeros((len(banks),))
     for p, bank in enumerate(banks):
-        ckt_p, _ = timing_mod.read_netlist(bank, n_seg=n_seg)
+        rc_p = (float(ext["bl_r_ohm"][p]), float(ext["bl_c_f"][p])) \
+            if ext is not None else None
+        ckt_p, _ = timing_mod.read_netlist(bank, n_seg=n_seg, rc=rc_p)
         assert len(ckt_p.names) == len(system.names) and \
             len(ckt_p.res) == len(res_stamps) and \
             len(ckt_p.caps) == len(cap_stamps), "topology group mismatch"
         g_vals[p] = [g for _, _, g in ckt_p.res]
         c_vals[p] = [c for _, _, c in ckt_p.caps]
-        t_an[p] = timing_mod.cell_read_time(bank)[0]
+        t_an[p] = timing_mod.cell_read_time(bank, rc=rc_p)[0]
 
     # float64 assembly, float64 all the way down (the group runs under
     # enable_x64 — see characterize; no f32 cast happens or should)
@@ -336,7 +348,7 @@ def t_cell_grad_fn(cfg: BankConfig, *, n_seg: int = 8, n_steps: int = 300,
 
 def characterize(cfgs: Sequence[BankConfig], *, n_steps: int = 300,
                  solver: str = "pallas", n_seg: int = 8,
-                 precision: str = "f64"
+                 precision: str = "f64", parasitics: str = "modeled"
                  ) -> List[Optional[TransientChar]]:
     """Batched transient read characterization of a config lattice.
 
@@ -345,7 +357,15 @@ def characterize(cfgs: Sequence[BankConfig], *, n_steps: int = 300,
     the scalar `timing.simulate_read` per point — same netlist builder,
     same integrator, same interpolated crossing extraction — but runs one
     compiled program per cell topology instead of one per point.
+
+    parasitics="extracted" (fidelity="layout") swaps the hand-modeled
+    read-bitline ladder for the batched layout extraction
+    (`repro.geom.extract.extract_lattice`) — one struct-of-arrays
+    extraction per topology group, same compiled transient pipeline.
     """
+    if parasitics not in ("modeled", "extracted"):
+        raise ValueError(f"parasitics must be 'modeled' or 'extracted', "
+                         f"got {parasitics!r}")
     cfgs = list(cfgs)
     out: List[Optional[TransientChar]] = [None] * len(cfgs)
     # float64 throughout (see timing.simulate_read: cond(J) ~ 1e6 makes
@@ -361,7 +381,8 @@ def characterize(cfgs: Sequence[BankConfig], *, n_steps: int = 300,
                 continue
             chars = _characterize_group(group, banks, n_seg=n_seg,
                                         n_steps=n_steps, solver=solver,
-                                        precision=precision)
+                                        precision=precision,
+                                        parasitics=parasitics)
             for i, ch in zip(idx, chars):
                 out[i] = ch
     return out

@@ -102,16 +102,19 @@ def decoder_delay(rows: int) -> float:
     return stages * FO4_S
 
 
-def wordline_delay(bank) -> float:
-    r, c = bank_mod.wordline_rc(bank)
+def wordline_delay(bank, rc=None) -> float:
+    """`rc` (r_ohm, c_f) overrides the hand-modeled wordline RC — the
+    hook the layout tier uses to drive this with EXTRACTED parasitics."""
+    r, c = rc if rc is not None else bank_mod.wordline_rc(bank)
     return elmore_delay(WL_DRIVER_R_OHM, r, c)
 
 
-def cell_read_time(bank, *, v_sn=None) -> tuple:
+def cell_read_time(bank, *, v_sn=None, rc=None) -> tuple:
     """Time for the cell to move RBL by the sense swing; returns
-    (seconds, swing_ok)."""
+    (seconds, swing_ok). `rc` (r_ohm, c_f) overrides the hand-modeled
+    read-bitline RC (extracted-parasitics hook, via totals included)."""
     tech = bank.cfg.tech
-    _, c_bl = bank_mod.bitline_rc(bank)
+    r_bl, c_bl = rc if rc is not None else bank_mod.bitline_rc(bank)
     c_bl += SA_INPUT_C_F
     if isinstance(bank.cell, Sram6T):
         i = bank.cell.i_read(tech)
@@ -133,7 +136,6 @@ def cell_read_time(bank, *, v_sn=None) -> tuple:
         dv_sense = swing
     i_net = max(i - leak, 1e-12)
     ok = i > 3.0 * leak
-    r_bl, _ = bank_mod.bitline_rc(bank)
     return cell_swing_time(dv_sense, c_bl, i_net, r_bl), ok
 
 
@@ -154,20 +156,44 @@ def write_time(bank) -> float:
     return t_wl + t_bl + t_sn
 
 
-def analyze(bank, *, vdd_scale: float = 1.0) -> Timing:
+def size_delay_chain(analog_s: float, tech) -> tuple:
+    """Control delay-chain sizing: the chain must cover the analog read
+    path with >= 30% margin, quantized to stages (the Fig 7a staircase).
+    Returns (stages, unit_s); chain delay is stages * unit_s."""
+    unit = chain_unit(analog_s, tech.stage_delay_s)
+    return int(math.ceil(analog_s * CHAIN_MARGIN / unit)), unit
+
+
+def analyze(bank, *, vdd_scale: float = 1.0,
+            parasitics: str = "modeled") -> Timing:
+    """Analytic read/write timing closure of one bank.
+
+    parasitics="modeled" (default) uses the hand RC models in
+    `core.bank`; "extracted" drives the read critical path — wordline
+    Elmore, cell sense-swing, and through them the control delay-chain
+    stage count — with the layout-extracted read-column RC from
+    `repro.geom.extract` (rail-row overhead, strip jogs, via stacks).
+    The write path stays hand-modeled either way: the extractor models
+    the READ column (see docs/layout.md)."""
+    if parasitics not in ("modeled", "extracted"):
+        raise ValueError(f"parasitics must be 'modeled' or 'extracted', "
+                         f"got {parasitics!r}")
     bank = bank_at_vdd(bank, vdd_scale)
     tech = bank.cfg.tech
+    wl_rc = bl_rc = None
+    if parasitics == "extracted":
+        from repro.geom import extract as geom_extract
+        rcs = geom_extract.read_column_rc(bank)
+        wl_rc = (rcs["wl_r_ohm"], rcs["wl_c_f"])
+        bl_rc = (rcs["bl_r_ohm"], rcs["bl_c_f"])
     t_dec = decoder_delay(bank.rows)
-    t_wl = wordline_delay(bank)
-    t_cell, ok = cell_read_time(bank)
+    t_wl = wordline_delay(bank, rc=wl_rc)
+    t_cell, ok = cell_read_time(bank, rc=bl_rc)
     t_colmux = 2 * FO4_S if bank.has_colmux else 0.0
     analog = t_wl + t_cell + t_colmux + tech.sa_delay_s
     if bank.is_gc:
         analog += REF_SETTLE_S  # single-ended sensing reference settle
-    # control delay chain must cover the analog path with >= 30% margin,
-    # quantized to stages (the Fig 7a staircase)
-    unit = chain_unit(analog, tech.stage_delay_s)
-    stages = int(math.ceil(analog * CHAIN_MARGIN / unit))
+    stages, unit = size_delay_chain(analog, tech)
     t_chain = stages * unit
     t_read = tech.dff_delay_s + t_dec + t_chain + tech.dff_delay_s
     t_wr = tech.dff_delay_s + t_dec + max(write_time(bank), t_chain * 0.6)
@@ -208,13 +234,16 @@ def read_stimulus(cell, tech, v_sn: float, t0: float):
     return waves, v_pre
 
 
-def read_netlist(bank, n_seg: int = 8):
+def read_netlist(bank, n_seg: int = 8, rc=None):
     """RBL column: WL driver -> RC ladder -> active cell + lumped leakers
-    -> SA cap. Returns (Circuit, metadata)."""
+    -> SA cap. Returns (Circuit, metadata). `rc` (r_ohm, c_f) overrides
+    the hand-modeled ladder totals with extracted ones; the element
+    STRUCTURE is identical either way (via R/C folds uniformly into the
+    ladder segments), so topology-grouped batching is unaffected."""
     from repro.core.spice.mna import Circuit
     tech = bank.cfg.tech
     cell = bank.cell
-    r_bl, c_bl = bank_mod.bitline_rc(bank)
+    r_bl, c_bl = rc if rc is not None else bank_mod.bitline_rc(bank)
     ckt = Circuit()
     # RWL driver as a voltage source on the cell gate path; RBL ladder:
     ckt.vsrc("rwl", 0)

@@ -1,0 +1,283 @@
+"""Layout tier tests: generated bank geometry, rule/connectivity
+verification, batched parasitic extraction, and the fidelity="layout"
+end-to-end plumbing.
+
+The load-bearing contracts:
+
+  * batched `extract_lattice` is BIT-identical to the per-point
+    `extract_point` reference over routed geometry (same IEEE-double
+    op sequence — see repro/geom/extract.py);
+  * every placed+routed bank in the supported matrix is DRC-clean and
+    its extracted read column is LVS-isomorphic to the MNA netlist
+    `timing.read_netlist` simulates;
+  * extracted parasitics stay within documented tolerance of the hand
+    models (the gap IS the fidelity the tier adds — it must be small,
+    not zero);
+  * the floorplan manifest is stable against golden files (int nm, so
+    equality is exact).
+"""
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import layout, timing
+from repro.core import bank as bank_mod
+from repro.core.bank import BankConfig, build_bank
+from repro.core.techfile import SYN40
+from repro.geom import (extract_lattice, extract_point, place_bank,
+                        read_column_segments, route_bank, verify_bank)
+from repro.geom import extract as gx
+from repro.geom.grid import RuleDeck, Rect
+from repro.geom.verify import check_rules, lvs_read_column
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden")
+
+MATRIX = [(cell, ws, nw)
+          for cell in ("gc2t_nn", "gc2t_np", "gc2t_osos", "gc3t",
+                       "gc2t_hyb", "sram6t")
+          for ws, nw in ((8, 32), (16, 64))]
+
+
+def _geom(cfg):
+    return route_bank(place_bank(build_bank(cfg)))
+
+
+# ---------------------------------------------------------------------------
+# cell geometry consistency (the satellite fix)
+# ---------------------------------------------------------------------------
+
+def test_cell_wh_product_equals_area_exactly():
+    """cell_area_um2 is DEFINED as the cell_wh_nm product — bitwise."""
+    for key in SYN40.cell_geoms:
+        w, h = layout.cell_wh_nm(SYN40, key)
+        assert w * h * layout.UM2_PER_NM2 == layout.cell_area_um2(SYN40, key)
+
+
+def test_cell_wh_margin_is_isotropic():
+    """The DRC margin splits evenly: w/h ratio == drawn pitches/tracks
+    ratio, and the margined area is (1+margin) x the drawn area."""
+    for key, g in SYN40.cell_geoms.items():
+        w, h = layout.cell_wh_nm(SYN40, key)
+        drawn_w = g["poly_pitches"] * SYN40.cpp
+        drawn_h = g["tracks"] * SYN40.track
+        assert w / h == pytest.approx(drawn_w / drawn_h, rel=1e-12)
+        assert w * h == pytest.approx(
+            drawn_w * drawn_h * (1.0 + g["margin"]), rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# placement + routing + verification matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cell,ws,nw", MATRIX,
+                         ids=[f"{c}-{w}x{n}" for c, w, n in MATRIX])
+def test_verify_bank_clean(cell, ws, nw):
+    r = verify_bank(BankConfig(ws, nw, cell=cell))
+    assert r["drc_clean"], r["drc_violations"]
+    assert r["lvs_ok"], r["lvs_msg"]
+    assert r["extract_bit_identical"]
+    assert r["n_vias"] > 0 and r["n_wires"] > 0
+
+
+def test_drc_catches_planted_violations():
+    """The checker is not vacuous: a short, a sliver and an escape each
+    trip a distinct rule."""
+    g = _geom(BankConfig(8, 32, cell="gc2t_nn"))
+    assert check_rules(g) == []
+    # different-net overlap (short)
+    w0 = g.wires[0]
+    g.wires.append(Rect(w0.layer, w0.x0, w0.y0, w0.x1, w0.y1,
+                        net="__other__", name="planted_short"))
+    assert any("short" in v for v in check_rules(g))
+    g.wires.pop()
+    # sub-minimum width sliver
+    g.wires.append(Rect("m2", 5000.0, 5000.0, 5010.0, 5500.0,
+                        net="__sliver__", name="planted_sliver"))
+    assert any("width" in v for v in check_rules(g))
+    g.wires.pop()
+    # out of bank bounds
+    g.wires.append(Rect("m3", -500.0, 0.0, -400.0, 400.0,
+                        net="__esc__", name="planted_escape"))
+    assert any("out of bank" in v for v in check_rules(g))
+    g.wires.pop()
+    assert check_rules(g) == []
+
+
+def test_lvs_catches_missing_bitline():
+    g = _geom(BankConfig(8, 32, cell="gc2t_nn"))
+    ok, _ = lvs_read_column(g)
+    assert ok
+    rbl = g.nets.pop("rbl_0")
+    ok, msg = lvs_read_column(g)
+    assert not ok and "rbl_0" in msg
+    g.nets["rbl_0"] = rbl
+
+
+def test_manifest_matches_golden():
+    """Floorplan manifests are integer-nm, so equality against the
+    checked-in golden files is exact — any placement/routing drift must
+    be intentional and regenerate the goldens."""
+    for cell, name in (("gc2t_nn", "manifest_gc2t_nn_16x64.json"),
+                       ("gc2t_osos", "manifest_gc2t_osos_16x64.json")):
+        got = _geom(BankConfig(16, 64, cell=cell)).manifest()
+        with open(os.path.join(GOLDEN, name)) as f:
+            want = json.load(f)
+        assert got == want, f"manifest drift for {cell} (see {name})"
+
+
+# ---------------------------------------------------------------------------
+# extraction: bit-parity, physical sanity, parity with hand models
+# ---------------------------------------------------------------------------
+
+def test_extract_lattice_bit_identical_to_point():
+    cfgs = [BankConfig(ws, nw, cell=cell) for cell, ws, nw in MATRIX]
+    banks = [build_bank(c) for c in cfgs]
+    lat = extract_lattice(banks)
+    for i, (cfg, bank) in enumerate(zip(cfgs, banks)):
+        point = extract_point(_geom(cfg))
+        for k, v in point.items():
+            assert v == float(lat[k][i]), (cfg.cell, k)
+
+
+def test_extracted_exceeds_hand_model_by_design():
+    """Extraction charges everything the hand model omits (rail rows,
+    strip jog, via stack), so extracted >= modeled on every component —
+    by a bounded, ROWS-DEPENDENT amount: the via stack + jog are fixed
+    overhead, so their relative weight shrinks as the column grows.
+    Documented tolerance (docs/layout.md): R <= 2.0x / C <= 1.5x at any
+    size, tightening to R <= 1.3x / C <= 1.15x from 64 rows up."""
+    for cell, ws, nw in (MATRIX + [("gc2t_nn", 32, 128),
+                                   ("gc2t_osos", 32, 128)]):
+        bank = build_bank(BankConfig(ws, nw, cell=cell))
+        rc = gx.read_column_rc(bank)
+        r_hand, c_hand = bank_mod.bitline_rc(bank)
+        assert rc["bl_r_ohm"] > r_hand
+        assert rc["bl_c_f"] > c_hand
+        r_cap, c_cap = (1.3, 1.15) if bank.rows >= 64 else (2.0, 1.5)
+        assert rc["bl_r_ohm"] <= r_cap * r_hand, (cell, ws, nw)
+        assert rc["bl_c_f"] <= c_cap * c_hand, (cell, ws, nw)
+        r_whand, c_whand = bank_mod.wordline_rc(bank)
+        # read wordline vs (write-flavored) hand wordline: same wire,
+        # different gate loading — lengths agree to the jog
+        assert rc["wl_r_ohm"] >= r_whand
+
+
+def test_elmore_parity_extracted_vs_analytic():
+    """Elmore delay of the extracted uniform ladder vs the analytic
+    closed form on the SAME totals: the discretized cumulative-sum
+    ladder approaches 0.69*(Rd*C + 0.5*R*C)/0.69 structure; with n_seg
+    segments the ladder sum is (1/2 + 1/(2 n_seg)) R C + Rd C, so the
+    two agree within 1/n_seg relative."""
+    from repro.geom import extract as ex
+    for cell in ("gc2t_nn", "gc2t_osos", "gc3t"):
+        bank = build_bank(BankConfig(16, 64, cell=cell))
+        seg = read_column_segments(bank, n_seg=8)
+        lad = ex.ladder_elmore_s(seg["r_seg_ohm"], seg["c_seg_f"])
+        r, c = seg["bl_r_ohm"], seg["bl_c_f"]
+        analytic = 0.5 * r * c
+        assert lad == pytest.approx(analytic, rel=1.0 / 8 + 1e-9)
+
+
+def test_extracted_analytic_t_cell_correction_bounded():
+    """Analytic cell_read_time on extracted vs hand-modeled parasitics:
+    the layout tier's correction stays a CORRECTION, not a different
+    model. Documented tolerance (docs/layout.md): < 20% at 16 rows,
+    < 15% at 32, < 10% from 64 rows up — the fixed via/jog overhead
+    washes out as the column grows, and the gap shrinks monotonically
+    with rows for every cell."""
+    for cell in ("gc2t_nn", "gc2t_np", "gc2t_osos", "gc3t",
+                 "gc2t_hyb", "sram6t"):
+        gaps = []
+        for ws, nw in ((8, 32), (16, 64), (32, 128)):
+            bank = build_bank(BankConfig(ws, nw, cell=cell))
+            t_hand, _ = timing.cell_read_time(bank)
+            rc = gx.read_column_rc(bank)
+            t_ext, _ = timing.cell_read_time(
+                bank, rc=(rc["bl_r_ohm"], rc["bl_c_f"]))
+            assert t_ext > t_hand
+            gap = (t_ext - t_hand) / t_hand
+            cap = 0.10 if bank.rows >= 64 else \
+                (0.15 if bank.rows >= 32 else 0.20)
+            assert gap < cap, (cell, ws, nw, gap)
+            gaps.append(gap)
+        assert gaps == sorted(gaps, reverse=True), (cell, gaps)
+
+
+def test_analyze_extracted_parasitics():
+    """timing.analyze(parasitics="extracted") slows the read path and
+    can only hold or grow the delay-chain stage count; write timing is
+    untouched (the extractor models the read column)."""
+    bank = build_bank(BankConfig(16, 64, cell="gc2t_nn"))
+    tm = timing.analyze(bank)
+    te = timing.analyze(bank, parasitics="extracted")
+    assert te.t_cell_s > tm.t_cell_s
+    assert te.t_wl_s > tm.t_wl_s
+    assert te.delay_stages >= tm.delay_stages
+    assert te.f_max_hz <= tm.f_max_hz
+    with pytest.raises(ValueError):
+        timing.analyze(bank, parasitics="wrong")
+
+
+def test_read_netlist_rc_override_preserves_structure():
+    """The extracted-ladder netlist is element-for-element the modeled
+    one with different values — the property that lets layout-tier
+    characterization reuse the compiled per-topology pipeline."""
+    bank = build_bank(BankConfig(16, 64, cell="gc2t_nn"))
+    rc = gx.read_column_rc(bank)
+    c0, _ = timing.read_netlist(bank)
+    c1, _ = timing.read_netlist(bank, rc=(rc["bl_r_ohm"], rc["bl_c_f"]))
+    assert c0.names == c1.names
+    assert len(c0.res) == len(c1.res) and len(c0.caps) == len(c1.caps)
+    assert [(a, b) for a, b, _ in c0.res] == [(a, b) for a, b, _ in c1.res]
+    g_ratio = {g1 / g0 for (_, _, g0), (_, _, g1) in zip(c0.res, c1.res)}
+    assert len(g_ratio) == 1          # uniform ladder scaling
+
+
+# ---------------------------------------------------------------------------
+# fidelity="layout" end-to-end (Session plumbing)
+# ---------------------------------------------------------------------------
+
+def test_sweep_query_validates_layout_fidelity():
+    from repro.api import SweepQuery
+    q = SweepQuery(fidelity="layout")
+    assert q.fidelity == "layout"
+    with pytest.raises(ValueError):
+        SweepQuery(fidelity="geometry")
+
+
+@pytest.mark.slow
+def test_layout_fidelity_end_to_end(tmp_path):
+    """SweepQuery(fidelity='layout') through a stored Session: the
+    LayoutTable carries clean geometry reports, the extracted transient
+    t_cell lands within 10% of the hand-modeled tier, and a FRESH
+    session replays everything from the artifact store with zero geometry
+    rebuilds or transient recomputes."""
+    from repro.api import LayoutTable, Session, SweepQuery
+    kw = dict(cells=("gc2t_nn", "gc2t_osos", "gc3t"), word_sizes=(16,),
+              num_words=(64,), wwlls=(False,), sim_steps=200)
+    s = Session(store=str(tmp_path))
+    t = s.run(SweepQuery(fidelity="layout", **kw))
+    assert isinstance(t, LayoutTable) and len(t) == 3
+    gsum = t.geometry_summary()
+    assert gsum["all_clean"] and gsum["n_verified"] == 3
+    tm = s.run(SweepQuery(fidelity="transient", **kw))
+    assert type(tm).__name__ == "CalibratedTable"   # distinct cache entry
+    for cl, cm in zip(t.transient, tm.transient):
+        assert cl.swing_ok and cm.swing_ok
+        assert cl.t_cell_s > cm.t_cell_s            # extraction adds RC
+        assert abs(cl.t_cell_s - cm.t_cell_s) / cm.t_cell_s < 0.10
+    d = t.as_dict()
+    assert d["geometry_summary"]["all_clean"]
+    assert all("geometry" in row for row in d["rows"])
+    json.dumps(d)                                   # JSON-able artifact
+
+    s2 = Session(store=str(tmp_path))
+    t2 = s2.run(SweepQuery(fidelity="layout", **kw))
+    assert s2.executor.stats.get("geom_verifies", 0) == 0
+    assert s2.executor.stats.get("char_calls", 0) == 0
+    assert t2.geometry == t.geometry
+    assert [c.t_cell_s for c in t2.transient] == \
+        [c.t_cell_s for c in t.transient]

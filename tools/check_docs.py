@@ -19,7 +19,8 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
-EXECUTED_DOCS = ["docs/query-api.md", "docs/runtime.md", "docs/fleet.md"]
+EXECUTED_DOCS = ["docs/query-api.md", "docs/runtime.md", "docs/fleet.md",
+                 "docs/layout.md"]
 
 
 def check_links() -> list:

@@ -1,0 +1,77 @@
+"""Layout-geometry CI gate.
+
+Places, routes, and verifies every bank in a cell x shape matrix:
+
+    PYTHONPATH=src python tools/check_geom.py            # full matrix
+    PYTHONPATH=src python tools/check_geom.py --smoke    # quick subset
+
+Per bank, `repro.geom.verify.verify_bank` must come back fully clean:
+
+  * DRC       — min width / min spacing / bank-boundary checks on every
+                rect the placer + router emitted, zero violations;
+  * LVS-lite  — the routed read column connects cell -> bitline ladder
+                -> sense strip, the wordline spans all columns, and the
+                net inventory matches the bank netlist;
+  * bit-parity— `extract_point` over the routed geometry equals the
+                closed-form `extract_lattice` entry BITWISE (the
+                contract that lets the batched extractor skip building
+                geometry per lattice point).
+
+Any unclean bank prints its violation list and fails the job. Exits 0
+only when the whole matrix is clean.
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import sys
+import time
+
+FULL_CELLS = ("sram6t", "gc2t_nn", "gc2t_np", "gc2t_osos", "gc2t_hyb",
+              "gc3t")
+FULL_SHAPES = ((8, 32), (16, 64), (32, 128))
+SMOKE_CELLS = ("gc2t_nn", "gc2t_osos", "gc3t")
+SMOKE_SHAPES = ((8, 32), (16, 64))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="3 cells x 2 shapes instead of the full matrix")
+    ap.add_argument("--n-seg", type=int, default=8)
+    args = ap.parse_args()
+
+    from repro.core.bank import BankConfig
+    from repro.geom import verify_bank
+
+    cells = SMOKE_CELLS if args.smoke else FULL_CELLS
+    shapes = SMOKE_SHAPES if args.smoke else FULL_SHAPES
+    t0 = time.time()
+    failures = []
+    for cell, (ws, nw) in itertools.product(cells, shapes):
+        cfg = BankConfig(ws, nw, cell=cell)
+        rep = verify_bank(cfg, n_seg=args.n_seg)
+        clean = (rep["drc_clean"] and rep["lvs_ok"]
+                 and rep["extract_bit_identical"])
+        tag = "ok  " if clean else "FAIL"
+        print(f"  {tag} {cell:10s} {ws:3d}x{nw:<3d}  "
+              f"wires={rep['n_wires']:5d} vias={rep['n_vias']:4d}  "
+              f"drc={rep['drc_clean']} lvs={rep['lvs_ok']} "
+              f"bit={rep['extract_bit_identical']}")
+        if not clean:
+            for v in rep.get("drc_violations", []):
+                print(f"       drc: {v}")
+            if not rep["lvs_ok"]:
+                print(f"       lvs: {rep['lvs_msg']}")
+            failures.append((cell, ws, nw))
+    n = len(cells) * len(shapes)
+    print(f"check_geom: {n - len(failures)}/{n} banks clean "
+          f"in {time.time() - t0:.1f}s")
+    if failures:
+        print(f"check_geom: FAILED {failures}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
